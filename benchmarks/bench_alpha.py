@@ -1,0 +1,68 @@
+"""Figures 8/9: Predictive alpha under increasingly strict SLAs.
+
+alpha in {1, 2} across a ladder of SLA budgets (fractions of the exhaustive
+P99); reports latency percentiles, SLA compliance, RBO, mean fraction of
+ranges processed, and the complete/safe/unsafe termination split (Fig 9).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.anytime import Predictive, run_query_anytime
+from repro.core.metrics import rbo
+from repro.core.oracle import exhaustive_topk
+from repro.core.range_daat import Engine
+
+
+def run():
+    corpus = common.bench_corpus()
+    ql = common.bench_queries(corpus, n=120, seed=5)
+    queries = [ql.terms[i] for i in range(ql.n_queries)]
+    idx = common.bench_index(corpus, "clustered_bp")
+    eng = Engine(idx, k=10)
+    common.warmup_engine(eng, queries)
+
+    base_times = []
+    exhaustive = {}
+    for i, q in enumerate(queries):
+        res = run_query_anytime(eng, eng.plan(q), policy=None)
+        base_times.append(res.elapsed_ms)
+        exhaustive[i] = exhaustive_topk(idx, q, 10)[0].tolist()
+    p99 = float(np.percentile(base_times, 99))
+
+    rows = []
+    for frac in (0.5, 0.25, 0.1, 0.05):
+        budget = p99 * frac
+        for alpha in (1.0, 2.0):
+            times, vals, fracs = [], [], []
+            split = {"exhausted": 0, "safe": 0, "policy": 0}
+            for i, q in enumerate(queries):
+                plan = eng.plan(q)
+                res = run_query_anytime(
+                    eng, plan, policy=Predictive(alpha), budget_ms=budget
+                )
+                times.append(res.elapsed_ms)
+                vals.append(rbo(res.doc_ids.tolist(), exhaustive[i], phi=0.8))
+                fracs.append(res.ranges_processed / idx.n_ranges)
+                split[res.exit_reason] += 1
+            t = np.asarray(times)
+            rows.append(
+                {
+                    "bench": "F8_alpha",
+                    "sla_frac_of_p99": frac,
+                    "budget_ms": round(budget, 2),
+                    "alpha": alpha,
+                    **{k: round(v, 2) for k, v in common.percentiles(t).items()},
+                    "miss_pct": round(100 * float((t > budget).mean()), 2),
+                    "sla_met": bool(np.percentile(t, 99) <= budget),
+                    "rbo": round(float(np.mean(vals)), 4),
+                    "frac_ranges": round(float(np.mean(fracs)), 3),
+                    "split_complete": split["exhausted"],
+                    "split_safe": split["safe"],
+                    "split_unsafe": split["policy"],
+                }
+            )
+    common.save_result("F8_alpha", rows)
+    return rows

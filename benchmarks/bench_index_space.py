@@ -1,0 +1,47 @@
+"""Table 2: index space consumption across index types and orderings.
+
+Variants: Default (single range) vs Clustered (32 topical ranges), each
+under Random and Reordered (BP within clusters / global BP) docid
+assignments, plus the impact-ordered JASS index. Logical bytes at
+paper-matched widths (DESIGN.md §7 note 4).
+"""
+
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core.saat import build_impact_index
+
+
+def run():
+    corpus = common.bench_corpus()
+    rows = []
+    variants = [
+        ("Default", "Random", "random", 1),
+        ("Default", "Reordered", "bp", 1),
+        ("Clustered", "Random", "clustered_random", common.N_RANGES),
+        ("Clustered", "Reordered", "clustered_bp", common.N_RANGES),
+    ]
+    base = {}
+    for index_type, ordering, strategy, n_ranges in variants:
+        idx = common.bench_index(corpus, strategy, n_ranges=n_ranges)
+        rep = idx.space_report()
+        ii = build_impact_index(idx)
+        jass = ii.space_gib(idx.quantizer.bits)
+        if ordering == "Random":
+            base[index_type] = rep["total_gib"]
+        rows.append(
+            {
+                "bench": "T2_index_space",
+                "index_type": index_type,
+                "ordering": ordering,
+                **{k: round(v * 1024, 3) for k, v in rep.items()},  # MiB
+                "jass_postings_mib": round(jass * 1024, 3),
+                "overhead_vs_default": round(
+                    rep["total_gib"]
+                    / common.bench_index(corpus, "random", 1).space_report()["total_gib"],
+                    3,
+                ),
+            }
+        )
+    common.save_result("T2_index_space", rows)
+    return rows

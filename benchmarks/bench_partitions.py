@@ -1,0 +1,95 @@
+"""Table 7: stability across random 50% partitions (§7.2).
+
+Ten random half-collections, each indexed (clustered+BP) and run under
+Predictive(alpha=2) at a ladder of SLAs; the claim is that the ten
+subcollections behave consistently (small max-min ranges), justifying the
+one-node experimental method. Uses a smaller corpus (10 index builds).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.anytime import Predictive, run_query_anytime
+from repro.core.clustered_index import build_index_cached
+from repro.core.metrics import rbo
+from repro.core.oracle import exhaustive_topk
+from repro.core.range_daat import Engine
+from repro.data.synth import Corpus, make_corpus, make_query_log
+
+N_TRIALS = 10
+
+
+def _half_corpus(corpus: Corpus, seed: int) -> Corpus:
+    rng = np.random.default_rng(seed)
+    keep = np.sort(rng.choice(corpus.n_docs, size=corpus.n_docs // 2, replace=False))
+    ptr = [0]
+    terms, tfs = [], []
+    for d in keep:
+        t, f = corpus.doc_slice(int(d))
+        terms.append(t)
+        tfs.append(f)
+        ptr.append(ptr[-1] + len(t))
+    return Corpus(
+        n_docs=len(keep),
+        n_terms=corpus.n_terms,
+        doc_ptr=np.asarray(ptr, np.int64),
+        doc_terms=np.concatenate(terms),
+        doc_tfs=np.concatenate(tfs),
+        doc_topic=corpus.doc_topic[keep],
+        n_topics=corpus.n_topics,
+    )
+
+
+def run():
+    corpus = make_corpus(n_docs=8000, n_terms=8000, n_topics=16,
+                         mean_doc_len=60, seed=10)
+    ql = make_query_log(corpus, n_queries=60, seed=11)
+    queries = [ql.terms[i] for i in range(ql.n_queries)]
+
+    # Per-trial measurements at each SLA fraction.
+    sla_fracs = (0.5, 0.25, 0.1)
+    per = {f: {"p50": [], "p95": [], "p99": [], "rbo": []} for f in sla_fracs}
+    for trial in range(N_TRIALS):
+        half = _half_corpus(corpus, seed=100 + trial)
+        idx = build_index_cached(
+            half, cache_dir=common.CACHE, n_ranges=16, strategy="clustered_bp",
+        )
+        eng = Engine(idx, k=10)
+        common.warmup_engine(eng, queries)
+        base = []
+        exhaustive = {}
+        for i, q in enumerate(queries):
+            res = run_query_anytime(eng, eng.plan(q), policy=None)
+            base.append(res.elapsed_ms)
+            exhaustive[i] = exhaustive_topk(idx, q, 10)[0].tolist()
+        p99 = float(np.percentile(base, 99))
+        for frac in sla_fracs:
+            budget = p99 * frac
+            times, vals = [], []
+            for i, q in enumerate(queries):
+                res = run_query_anytime(
+                    eng, eng.plan(q), policy=Predictive(2.0), budget_ms=budget
+                )
+                times.append(res.elapsed_ms)
+                vals.append(rbo(res.doc_ids.tolist(), exhaustive[i], phi=0.8))
+            per[frac]["p50"].append(float(np.percentile(times, 50)))
+            per[frac]["p95"].append(float(np.percentile(times, 95)))
+            per[frac]["p99"].append(float(np.percentile(times, 99)))
+            per[frac]["rbo"].append(float(np.mean(vals)))
+
+    rows = []
+    for frac in sla_fracs:
+        row = {"bench": "T7_partitions", "sla_frac_of_p99": frac,
+               "n_trials": N_TRIALS}
+        for m in ("p50", "p95", "p99", "rbo"):
+            xs = np.asarray(per[frac][m])
+            row[f"{m}_mean"] = round(float(xs.mean()), 4)
+            row[f"{m}_range"] = round(float(xs.max() - xs.min()), 4)
+            row[f"{m}_range_pct"] = round(
+                100 * float((xs.max() - xs.min()) / max(xs.mean(), 1e-9)), 2
+            )
+        rows.append(row)
+    common.save_result("T7_partitions", rows)
+    return rows

@@ -1,0 +1,54 @@
+"""Quantization fidelity (paper §2.1): 8-10 bits suffice for large
+collections. Sweep b in {4, 6, 8, 10} and measure RBO of the quantized
+engine's top-k against FLOAT BM25 exhaustive scoring.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.bm25 import invert
+from repro.core.clustered_index import build_index
+from repro.core.metrics import rbo
+from repro.core.range_daat import Engine
+from repro.core.reorder import arrange
+
+
+def _float_topk(post, q_terms, k):
+    acc = np.zeros(post.n_docs, dtype=np.float64)
+    for t in np.asarray(q_terms).reshape(-1):
+        if t < 0:
+            continue
+        s, e = post.ptr[int(t)], post.ptr[int(t) + 1]
+        np.add.at(acc, post.docs[s:e], post.scores[s:e])
+    order = np.lexsort((np.arange(acc.shape[0]), -acc))[:k]
+    return order[acc[order] > 0]
+
+
+def run():
+    corpus = common.bench_corpus()
+    ql = common.bench_queries(corpus, n=60, seed=9)
+    arr = arrange(corpus, n_ranges=common.N_RANGES, strategy="clustered_bp")
+    post = invert(corpus, arr.doc_order)
+
+    rows = []
+    for bits in (4, 6, 8, 10):
+        idx = build_index(corpus, arrangement=arr, bits=bits)
+        eng = Engine(idx, k=10)
+        vals = []
+        for i in range(ql.n_queries):
+            q = ql.terms[i]
+            res = eng.traverse(eng.plan(q))
+            ids, _ = eng.topk_docs(res.state)
+            gold = _float_topk(post, q, 10)
+            vals.append(rbo(ids.tolist(), gold.tolist(), phi=0.8))
+        rows.append(
+            {
+                "bench": "Q_quantization",
+                "bits": bits,
+                "rbo_vs_float": round(float(np.mean(vals)), 4),
+            }
+        )
+    common.save_result("Q_quantization", rows)
+    return rows

@@ -1,0 +1,107 @@
+"""Table 4: effectiveness of range orderings vs ranges processed.
+
+Orderings: BoundSum (ours), Oracle (RBP-weighted per Eqs. 1-2 over the
+exhaustive ranking), and CSI-Sample — a central-sample-index baseline
+standing in for the paper's LTRR (a learned ranker we do not train; the
+CSI is the classic selective-search selector [35], so the comparison stays
+real). Metrics: RBP(0.8), AP@1000 against planted qrels, RBO(0.99) vs
+exhaustive. n ranges in {1, 5, 10, 20, All}.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.metrics import average_precision, rbo, rbp
+from repro.core.oracle import exhaustive_topk
+from repro.core.range_daat import Engine
+from repro.data.synth import planted_qrels
+
+PHI_ORACLE = 0.99
+
+
+def oracle_order(index, q, k=10_000):
+    """Eq. 1-2: ranges by aggregate RBP weight of the exhaustive ranking."""
+    oid, _ = exhaustive_topk(index, q, k)
+    r_of = np.searchsorted(index.range_ends, oid, side="right")
+    w = np.zeros(index.n_ranges)
+    np.add.at(w, r_of, (1 - PHI_ORACLE) * PHI_ORACLE ** np.arange(len(oid)))
+    return np.argsort(-w, kind="stable").astype(np.int32)
+
+
+def csi_sample_order(index, q, sample_frac=0.02, seed=7):
+    """Central sample index: score a 2% sample per range, order by best."""
+    rng = np.random.default_rng(seed)
+    from repro.core.oracle import exhaustive_scores
+
+    scores = exhaustive_scores(index, q)
+    best = np.zeros(index.n_ranges)
+    for r in range(index.n_ranges):
+        lo, hi = index.range_starts[r], index.range_ends[r]
+        n = max(1, int((hi - lo) * sample_frac))
+        sample = rng.integers(lo, hi, size=n)
+        best[r] = scores[sample].max() if n else 0
+    return np.argsort(-best, kind="stable").astype(np.int32)
+
+
+def run_with_order(engine, plan, order, n_ranges):
+    """Re-run the device traversal under an externally supplied ordering."""
+    import jax.numpy as jnp
+
+    bsums = np.asarray(plan.ordered_bounds)[np.argsort(plan.order_host)]
+    new_bounds = bsums[order]
+    plan2 = plan.__class__(
+        q_terms=plan.q_terms,
+        blk_tab=plan.blk_tab,
+        rest_tab=plan.rest_tab,
+        order=jnp.asarray(order),
+        ordered_bounds=jnp.asarray(new_bounds.astype(np.int32)),
+        order_host=order,
+        bounds_host=new_bounds.astype(np.int64),
+    )
+    res = engine.traverse(plan2, max_ranges=n_ranges, safe_stop=n_ranges >= 10**8)
+    ids, _ = engine.topk_docs(res.state)
+    return ids
+
+
+def run():
+    corpus = common.bench_corpus()
+    ql = common.bench_queries(corpus, n=60, seed=2)
+    qrels = planted_qrels(corpus, ql)
+    idx = common.bench_index(corpus, "clustered_bp")
+    eng = Engine(idx, k=1000)
+
+    rows = []
+    budgets = [1, 5, 10, 20, 10**9]
+    metrics = {b: {m: {"BndSum": [], "CSI": [], "Oracle": []}
+                   for m in ("rbp", "ap", "rbo")} for b in budgets}
+    for qi in range(ql.n_queries):
+        q = ql.terms[qi]
+        plan = eng.plan(q)
+        oid, _ = exhaustive_topk(idx, q, 1000)
+        orders = {
+            "BndSum": plan.order_host,
+            "CSI": csi_sample_order(idx, q),
+            "Oracle": oracle_order(idx, q),
+        }
+        for b in budgets:
+            for name, order in orders.items():
+                ids = run_with_order(eng, plan, order, b)
+                metrics[b]["rbp"][name].append(rbp(ids, qrels[qi], phi=0.8))
+                metrics[b]["ap"][name].append(
+                    average_precision(ids, list(qrels[qi]), k=1000)
+                )
+                metrics[b]["rbo"][name].append(
+                    rbo(ids.tolist(), oid.tolist(), phi=0.99)
+                )
+
+    for b in budgets:
+        row = {"bench": "T4_range_selection",
+               "ranges": "All" if b >= 10**8 else b}
+        for m in ("rbp", "ap", "rbo"):
+            for name in ("BndSum", "CSI", "Oracle"):
+                row[f"{m}_{name}"] = round(float(np.mean(metrics[b][m][name])), 4)
+        rows.append(row)
+    common.save_result("T4_range_selection", rows)
+    return rows

@@ -1,0 +1,76 @@
+"""Figure 10 / Table 6: Reactive feedback on a long query stream.
+
+Predictive(alpha=1, 2) vs Reactive(beta in {1.5, 1.2, 1.1}) on a longer
+stream (the bench log repeated in shuffled order, the paper's 60k-query
+analogue), strict SLA (10% of exhaustive P99). Traces alpha over the
+stream (sawtooth of Fig 10) and checks the ~1%-miss targeting property.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.anytime import Predictive, Reactive, run_query_anytime
+from repro.core.metrics import rbo
+from repro.core.oracle import exhaustive_topk
+from repro.core.range_daat import Engine
+
+STREAM_REPEATS = 5
+
+
+def run():
+    corpus = common.bench_corpus()
+    ql = common.bench_queries(corpus, n=120, seed=6)
+    base_queries = [ql.terms[i] for i in range(ql.n_queries)]
+    idx = common.bench_index(corpus, "clustered_bp")
+    eng = Engine(idx, k=10)
+    common.warmup_engine(eng, base_queries)
+
+    rng = np.random.default_rng(0)
+    stream = []
+    for r in range(STREAM_REPEATS):
+        order = rng.permutation(len(base_queries))
+        stream.extend(int(i) for i in order)
+
+    base_times = []
+    exhaustive = {}
+    for i, q in enumerate(base_queries):
+        res = run_query_anytime(eng, eng.plan(q), policy=None)
+        base_times.append(res.elapsed_ms)
+        exhaustive[i] = exhaustive_topk(idx, q, 10)[0].tolist()
+    budget = float(np.percentile(base_times, 99)) * 0.1
+
+    def run_stream(policy, name):
+        times, vals = [], []
+        for qi in stream:
+            plan = eng.plan(base_queries[qi])
+            res = run_query_anytime(eng, plan, policy=policy, budget_ms=budget)
+            times.append(res.elapsed_ms)
+            vals.append(rbo(res.doc_ids.tolist(), exhaustive[qi], phi=0.8))
+        t = np.asarray(times)
+        return {
+            "bench": "T6_reactive",
+            "system": name,
+            "budget_ms": round(budget, 2),
+            **{k: round(v, 2) for k, v in common.percentiles(t).items()},
+            "miss_pct": round(100 * float((t > budget).mean()), 2),
+            "rbo": round(float(np.mean(vals)), 4),
+            "alpha_trace_tail": (
+                [round(a, 3) for a in policy.trace[-12:]]
+                if isinstance(policy, Reactive) else None
+            ),
+            "alpha_final": (
+                round(policy.alpha, 3) if isinstance(policy, Reactive) else None
+            ),
+        }
+
+    rows = [
+        run_stream(Predictive(1.0), "Predictive-a1"),
+        run_stream(Predictive(2.0), "Predictive-a2"),
+    ]
+    for beta in (1.5, 1.2, 1.1):
+        rows.append(run_stream(Reactive(alpha=1.0, beta=beta, q=0.01),
+                               f"Reactive-b{beta}"))
+    common.save_result("T6_reactive", rows)
+    return rows

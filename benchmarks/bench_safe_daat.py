@@ -1,0 +1,61 @@
+"""Figure 5: rank-safe query processing — Default vs Clustered traversal.
+
+Default = docid-order windows + listwise/global bounds (range-oblivious);
+Clustered = BoundSum order + rangewise bounds + safe early termination.
+Both rank-safe; compared on latency and work (postings scored, blocks).
+k = 10 and k = 1000, as in the figure.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.range_daat import Engine
+
+
+def _measure(engine, queries):
+    times, postings, blocks, ranges = [], [], [], []
+    common.warmup_engine(engine, queries)
+    for q in queries:
+        plan = engine.plan(q)
+        t0 = time.perf_counter()
+        res = engine.traverse(plan)
+        res.state.vals.block_until_ready()
+        times.append((time.perf_counter() - t0) * 1e3)
+        postings.append(int(res.state.postings))
+        blocks.append(int(res.state.blocks))
+        ranges.append(int(res.ranges_processed))
+    return times, postings, blocks, ranges
+
+
+def run():
+    corpus = common.bench_corpus()
+    ql = common.bench_queries(corpus)
+    queries = [ql.terms[i] for i in range(ql.n_queries)]
+    idx = common.bench_index(corpus, "clustered_bp")
+
+    rows = []
+    for k in (10, 1000):
+        for mode, ordering, bounds in (
+            ("Default-DAAT", "docid", "global"),
+            ("Clustered-DAAT", "boundsum", "range"),
+        ):
+            eng = Engine(idx, k=k, ordering=ordering, bounds=bounds)
+            times, postings, blocks, ranges = _measure(eng, queries)
+            rows.append(
+                {
+                    "bench": "F5_safe_daat",
+                    "k": k,
+                    "mode": mode,
+                    **{k2: round(v, 3) for k2, v in common.percentiles(times).items()},
+                    "mean_ms": round(float(np.mean(times)), 3),
+                    "mean_postings": int(np.mean(postings)),
+                    "mean_blocks": int(np.mean(blocks)),
+                    "mean_ranges": round(float(np.mean(ranges)), 2),
+                }
+            )
+    common.save_result("F5_safe_daat", rows)
+    return rows

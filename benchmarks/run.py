@@ -1,0 +1,112 @@
+"""Benchmark entry point: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per the repo contract, where
+us_per_call is the benchmark's headline per-query latency (microseconds)
+where latency is meaningful, and ``derived`` carries the headline claim
+metric. Full rows land in benchmarks/results/*.json for EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("T2_index_space", "benchmarks.bench_index_space"),
+    ("T3_saat_reorder", "benchmarks.bench_saat_reorder"),
+    ("F5_safe_daat", "benchmarks.bench_safe_daat"),
+    ("T4_range_selection", "benchmarks.bench_range_selection"),
+    ("F7_tradeoff", "benchmarks.bench_tradeoff"),
+    ("T5_sla", "benchmarks.bench_sla"),
+    ("F8_alpha", "benchmarks.bench_alpha"),
+    ("T6_reactive", "benchmarks.bench_reactive"),
+    ("T7_partitions", "benchmarks.bench_partitions"),
+    ("F11_scaling", "benchmarks.bench_scaling"),
+    ("T8_failures", "benchmarks.bench_failures"),
+    ("Q_quantization", "benchmarks.bench_quantization"),
+]
+
+
+def _headline(name: str, rows) -> tuple[float, str]:
+    """(us_per_call, derived) summaries per benchmark."""
+    try:
+        if name == "T2_index_space":
+            clustered = next(
+                r for r in rows
+                if r["index_type"] == "Clustered" and r["ordering"] == "Reordered"
+            )
+            return 0.0, f"clustered_overhead={clustered['overhead_vs_default']}x"
+        if name == "T3_saat_reorder":
+            r = rows[0]
+            return (
+                r["reordered_p50"] * 1e3,
+                f"lines_ratio={r['lines_ratio']}x_speedup_p50={r['speedup_p50']}x",
+            )
+        if name == "F5_safe_daat":
+            r = next(x for x in rows if x["k"] == 10 and "Clustered" in x["mode"])
+            d = next(x for x in rows if x["k"] == 10 and "Default" in x["mode"])
+            return r["p50"] * 1e3, f"clustered_vs_default_p50={d['p50']/max(r['p50'],1e-9):.2f}x"
+        if name == "T4_range_selection":
+            r10 = next(x for x in rows if x["ranges"] == 10)
+            return 0.0, f"rbo10_bndsum={r10['rbo_BndSum']}_oracle={r10['rbo_Oracle']}"
+        if name == "F7_tradeoff":
+            r = next(x for x in rows if x["system"] == "BndSum" and x["setting"] == "n=10" and x["k"] == 10)
+            return r["p50_ms"] * 1e3, f"rbo={r['rbo']}"
+        if name == "T5_sla":
+            r = next(x for x in rows if x["system"] == "Predictive-a1")
+            return r["p99"] * 1e3, f"sla_met={r['sla_met']}_rbo={r['rbo']}"
+        if name == "F8_alpha":
+            r = next(x for x in rows if x["alpha"] == 2.0 and x["sla_frac_of_p99"] == 0.1)
+            return r["p99"] * 1e3, f"sla_met={r['sla_met']}_rbo={r['rbo']}"
+        if name == "T6_reactive":
+            r = next(x for x in rows if x["system"] == "Reactive-b1.2")
+            return r["p99"] * 1e3, f"miss_pct={r['miss_pct']}_rbo={r['rbo']}"
+        if name == "T7_partitions":
+            r = rows[-1]
+            return 0.0, f"p99_range_pct={r['p99_range_pct']}%"
+        if name == "F11_scaling":
+            r = next(x for x in rows if x["batch"] == 32 and x["budget"] == "unlimited")
+            return 1e6 / max(r["qps"], 1e-9), f"speedup_b32={r['speedup_vs_b1']}x"
+        if name == "Q_quantization":
+            r8 = next(x for x in rows if x["bits"] == 8)
+            r4 = next(x for x in rows if x["bits"] == 4)
+            return 0.0, f"rbo8bit={r8['rbo_vs_float']}_rbo4bit={r4['rbo_vs_float']}"
+        if name == "T8_failures":
+            r = rows[-1]
+            if r.get("summary"):
+                return 0.0, (
+                    f"depth_low={r['mean_avg_depth_low_rbo']}"
+                    f"_high={r['mean_avg_depth_high_rbo']}"
+                )
+    except (StopIteration, KeyError, IndexError):
+        pass
+    return 0.0, "see_json"
+
+
+def main() -> None:
+    import importlib
+
+    only = sys.argv[1:] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    failures = []
+    for name, module in MODULES:
+        if only and not any(o in name for o in only):
+            continue
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(module)
+            rows = mod.run()
+            us, derived = _headline(name, rows)
+            print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            print(f"{name},nan,FAILED:{type(e).__name__}", flush=True)
+            failures.append(name)
+        sys.stderr.write(f"# {name} took {time.time()-t0:.1f}s\n")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Policy x SLA compliance matrix (paper Table 5 in miniature).
+
+    PYTHONPATH=src python examples/sla_sweep.py
+"""
+
+import numpy as np
+
+from repro.core import Engine, arrange, build_index
+from repro.core.anytime import (
+    Fixed, Overshoot, Predictive, Reactive, Undershoot, run_query_anytime,
+)
+from repro.core.metrics import rbo
+from repro.core.oracle import exhaustive_topk
+from repro.data.synth import make_corpus, make_query_log
+
+
+def main():
+    corpus = make_corpus(n_docs=8000, n_terms=6000, n_topics=16,
+                         mean_doc_len=150, seed=0)
+    log = make_query_log(corpus, n_queries=120, seed=3)
+    arr = arrange(corpus, n_ranges=16, strategy="clustered_bp", bp_rounds=4)
+    index = build_index(corpus, arrangement=arr)
+    engine = Engine(index, k=10)
+
+    base, oracle = [], {}
+    for i in range(log.n_queries):
+        res = run_query_anytime(engine, engine.plan(log.terms[i]), policy=None)
+        base.append(res.elapsed_ms)
+        oracle[i] = exhaustive_topk(index, log.terms[i], 10)[0].tolist()
+    p99 = float(np.percentile(base, 99))
+
+    print(f"exhaustive P99 = {p99:.1f} ms")
+    print(f"{'policy':<22} {'SLA(ms)':>8} {'P99':>8} {'miss%':>6} {'RBO':>6}")
+    for frac in (0.5, 0.25, 0.1):
+        budget = p99 * frac
+        for mk in (
+            lambda: Fixed(8),
+            lambda: Overshoot(),
+            lambda: Undershoot(max(0.5, budget / 8)),
+            lambda: Predictive(1.0),
+            lambda: Predictive(2.0),
+            lambda: Reactive(alpha=1.0, beta=1.2),
+        ):
+            pol = mk()
+            times, vals = [], []
+            for i in range(log.n_queries):
+                res = run_query_anytime(
+                    engine, engine.plan(log.terms[i]), policy=pol,
+                    budget_ms=budget,
+                )
+                times.append(res.elapsed_ms)
+                vals.append(rbo(res.doc_ids.tolist(), oracle[i], phi=0.8))
+            t = np.asarray(times)
+            flag = "OK " if np.percentile(t, 99) <= budget else "MISS"
+            print(f"{pol.name:<22} {budget:8.1f} {np.percentile(t,99):8.2f} "
+                  f"{(t > budget).mean()*100:6.2f} {np.mean(vals):6.3f}  {flag}")
+
+
+if __name__ == "__main__":
+    main()

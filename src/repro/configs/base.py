@@ -1,0 +1,601 @@
+"""Uniform architecture interface: configs -> params/steps/specs.
+
+Every assigned architecture is an ``Arch`` with:
+  * ``model_config(reduced)``  — exact published config, or a reduced
+    same-family config for CPU smoke tests;
+  * ``shapes()``               — its assigned input-shape cells (kind =
+    train | prefill | decode | serve | retrieval; ``skip`` marks cells the
+    instructions exclude, e.g. long_500k on full-attention LMs);
+  * ``input_specs(cfg, shape)``— global ShapeDtypeStructs for the dry-run;
+  * ``make_batch(cfg, shape)`` — real (small) arrays for smoke tests;
+  * ``build_step(cfg, shape)`` — the jittable train/serve step;
+  * ``param_pspecs`` / ``batch_pspecs`` — PartitionSpecs for the mesh.
+
+The dry-run lowers ``build_step`` with ``input_specs`` under the production
+mesh; smoke tests run the same step eagerly with ``make_batch``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import ShardCtx
+from repro.models import gnn as gnn_mod
+from repro.models import recsys as rec_mod
+from repro.models import transformer as tfm
+from repro.optim.adamw import AdamWConfig
+from repro.train.trainer import make_train_step
+
+__all__ = ["ShapeInfo", "Arch", "LMArch", "GNNArch", "RecArch"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeInfo:
+    name: str
+    kind: str  # "train" | "prefill" | "decode" | "serve" | "retrieval"
+    desc: str
+    skip: Optional[str] = None  # reason, if this cell is excluded
+
+
+class Arch:
+    name: str = ""
+    family: str = ""
+
+    def shapes(self) -> dict[str, ShapeInfo]:
+        raise NotImplementedError
+
+    def model_config(self, reduced: bool = False):
+        raise NotImplementedError
+
+    def init_params(self, key, cfg):
+        raise NotImplementedError
+
+    def param_shapes(self, cfg):
+        """ShapeDtypeStruct pytree of the params (no allocation)."""
+        return jax.eval_shape(lambda: self.init_params(jax.random.key(0), cfg))
+
+    def input_specs(self, cfg, shape: str):
+        raise NotImplementedError
+
+    def make_batch(self, cfg, shape: str, seed: int = 0):
+        raise NotImplementedError
+
+    def build_step(self, cfg, shape: str, shard_ctx: ShardCtx | None = None):
+        raise NotImplementedError
+
+    def param_pspecs(self, cfg, params):
+        raise NotImplementedError
+
+    def batch_pspecs(self, cfg, shape: str, ctx: ShardCtx):
+        raise NotImplementedError
+
+    def moment_dtype(self, cfg) -> str:
+        return "fp32"
+
+    def model_flops_per_token(self, cfg) -> float:
+        """6*N (dense) / 6*N_active (MoE) — §Roofline MODEL_FLOPS basis."""
+        return 0.0
+
+
+# ---------------------------------------------------------------------- LM
+
+
+_LM_SHAPES = {
+    "train_4k": ShapeInfo("train_4k", "train", "seq 4096, global batch 256"),
+    "prefill_32k": ShapeInfo("prefill_32k", "prefill", "seq 32768, batch 32"),
+    "decode_32k": ShapeInfo(
+        "decode_32k", "decode", "1 new token, KV len 32768, batch 128"
+    ),
+    "long_500k": ShapeInfo(
+        "long_500k",
+        "decode",
+        "seq 524288, batch 1",
+        skip="pure full-attention arch: O(n^2) softmax attention; sub-quadratic "
+        "attention required for 500k decode (DESIGN.md §4)",
+    ),
+}
+
+_LM_DIMS = {
+    "train_4k": dict(batch=256, seq=4096),
+    "prefill_32k": dict(batch=32, seq=32768),
+    "decode_32k": dict(batch=128, seq=32768),
+    "long_500k": dict(batch=1, seq=524288),
+}
+_LM_REDUCED_DIMS = {
+    "train_4k": dict(batch=2, seq=64),
+    "prefill_32k": dict(batch=2, seq=64),
+    "decode_32k": dict(batch=2, seq=64),
+    "long_500k": dict(batch=1, seq=64),
+}
+
+
+class LMArch(Arch):
+    family = "lm"
+
+    def __init__(self, name: str, full_cfg: Callable[[], tfm.LMConfig],
+                 reduced_cfg: Callable[[], tfm.LMConfig], moments: str = "fp32",
+                 fsdp: bool = False):
+        self.name = name
+        self._full = full_cfg
+        self._reduced = reduced_cfg
+        self._moments = moments
+        # FSDP-style param sharding over the data axis (in addition to TP):
+        # required when N_params * 2B / n_model exceeds per-chip HBM
+        # (deepseek-67b, deepseek-v3-671b, moonshot). GSPMD inserts the
+        # per-layer all-gathers inside the scan.
+        self.fsdp = fsdp
+
+    def shapes(self):
+        return dict(_LM_SHAPES)
+
+    def model_config(self, reduced: bool = False):
+        return self._reduced() if reduced else self._full()
+
+    def init_params(self, key, cfg):
+        return tfm.init_lm(key, cfg)
+
+    def moment_dtype(self, cfg):
+        return self._moments
+
+    def model_flops_per_token(self, cfg):
+        total, active = tfm.count_params(cfg)
+        del total
+        return 6.0 * active
+
+    def _dims(self, cfg, shape):
+        table = _LM_DIMS if cfg.max_seq > 1024 else _LM_REDUCED_DIMS
+        return table[shape]
+
+    def input_specs(self, cfg, shape):
+        d = self._dims(cfg, shape)
+        B, S = d["batch"], d["seq"]
+        tok = lambda b, s: jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if shape == "train_4k":
+            return {"tokens": tok(B, S)}
+        if shape == "prefill_32k":
+            return {"tokens": tok(B, S)}
+        if shape in ("decode_32k", "long_500k"):
+            cache = jax.eval_shape(lambda: tfm.init_cache(cfg, B, S))
+            return {
+                "tokens": tok(B, 1),
+                "cache": cache,
+                "pos": jax.ShapeDtypeStruct((), jnp.int32),
+            }
+        raise KeyError(shape)
+
+    def make_batch(self, cfg, shape, seed: int = 0):
+        d = self._dims(cfg, shape)
+        B, S = d["batch"], d["seq"]
+        rng = np.random.default_rng(seed)
+        if shape in ("train_4k", "prefill_32k"):
+            return {
+                "tokens": rng.integers(0, cfg.vocab, size=(B, S)).astype(np.int32)
+            }
+        cache = tfm.init_cache(cfg, B, S)
+        return {
+            "tokens": rng.integers(0, cfg.vocab, size=(B, 1)).astype(np.int32),
+            "cache": cache,
+            "pos": np.int32(S // 2),
+        }
+
+    variants = ("baseline", "split_kv")
+
+    def build_step(self, cfg, shape, shard_ctx=None, variant: str = "baseline"):
+        if shape == "train_4k":
+            loss = lambda p, b: tfm.lm_loss(p, b["tokens"], cfg, shard_ctx)
+            return make_train_step(
+                loss, AdamWConfig(moment_dtype=self._moments)
+            ), "train"
+
+        if shape == "prefill_32k":
+            # CHUNKED prefill (Sarathi-style): scan over chunks with the
+            # cache as carry. Single-shot 32k prefill peaks at 86 GiB/device
+            # on deepseek-v3 — chunking bounds the live working set.
+            # variant split_kv additionally seq-shards the cache (GQA archs:
+            # chunk == per-rank slice, sequence-parallel partial-softmax
+            # attention) so prefill and decode share one serving layout —
+            # deepseek-67b's 25.5 GiB/device batch-sharded cache becomes
+            # 1.6 GiB (§Perf cell A).
+            impl = "split_kv" if variant == "split_kv" else "batch"
+
+            def prefill(params, batch):
+                B, S = batch["tokens"].shape
+                cache = tfm.init_cache(cfg, B, S)
+                if impl == "split_kv" and not isinstance(cfg.attn, tfm.MLAConfig):
+                    ch = S // (shard_ctx.n_model if shard_ctx else 1)
+                else:
+                    ch = min(4096, S)
+                nc = S // ch
+                chunks = batch["tokens"].reshape(B, nc, ch).transpose(1, 0, 2)
+
+                def body(cache, inp):
+                    idx, toks = inp
+                    logits, cache = tfm.lm_decode_step(
+                        params, toks, cache, idx * ch, cfg, shard_ctx,
+                        logits_last_only=True, decode_impl=impl,
+                    )
+                    return cache, logits
+
+                cache, logits = jax.lax.scan(
+                    body, cache, (jnp.arange(nc), chunks)
+                )
+                return logits[-1], cache
+            return prefill, "serve"
+
+        impl = "split_kv" if variant == "split_kv" else "batch"
+
+        def decode(params, batch):
+            return tfm.lm_decode_step(
+                params, batch["tokens"], batch["cache"], batch["pos"], cfg,
+                shard_ctx, logits_last_only=True, decode_impl=impl,
+            )
+        return decode, "serve"
+
+    def param_pspecs(self, cfg, params, variant: str = "baseline", ctx=None):
+        del params
+        if variant == "split_kv":
+            ep_grid_ok = bool(
+                cfg.moe is not None
+                and ctx is not None
+                and cfg.moe.n_experts
+                % (ctx.mesh.shape["data"] * ctx.n_model) == 0
+            )
+            return tfm.param_specs_splitkv(cfg, ep_grid_ok=ep_grid_ok)
+        return tfm.param_specs(cfg)
+
+    def batch_pspecs(self, cfg, shape, ctx: ShardCtx, variant: str = "baseline"):
+        da = ctx.data_axes
+        if shape in ("train_4k", "prefill_32k"):
+            return {"tokens": P(da, None)}
+        layout = "split" if variant == "split_kv" else "batch"
+        return {
+            "tokens": P(da, None),
+            "cache": tfm.cache_specs(cfg, da, layout),
+            "pos": P(),
+        }
+
+
+# --------------------------------------------------------------------- GNN
+
+
+class GNNArch(Arch):
+    family = "gnn"
+
+    _SHAPES = {
+        "full_graph_sm": ShapeInfo(
+            "full_graph_sm", "train", "full-batch, 2708 nodes / 10556 edges"
+        ),
+        "minibatch_lg": ShapeInfo(
+            "minibatch_lg", "train", "sampled 1024-node batch, fanout 15-10"
+        ),
+        "ogb_products": ShapeInfo(
+            "ogb_products", "train", "full-batch 2.45M nodes / 61.9M edges"
+        ),
+        "molecule": ShapeInfo(
+            "molecule", "train", "128 graphs x 30 nodes, graph classification"
+        ),
+    }
+
+    # NOTE: edge counts are padded up to multiples of 512 (= pod*data*model
+    # worst case) so edge arrays shard evenly; padding edges use src=-1 and
+    # are dropped by the masked aggregation.
+    _DIMS = {
+        "full_graph_sm": dict(nodes=2708, edges=10752, d=1433, classes=7),
+        "minibatch_lg": dict(
+            nodes=180224, edges1=15360, edges2=163840, d=602, classes=41,
+            batch=1024,
+        ),
+        "ogb_products": dict(nodes=2449029, edges=61860352, d=100, classes=47),
+        "molecule": dict(batch=128, n_nodes=30, n_edges=64, d=64, classes=32),
+    }
+    _DIMS_REDUCED = {
+        "full_graph_sm": dict(nodes=200, edges=800, d=32, classes=7),
+        "minibatch_lg": dict(
+            nodes=500, edges1=64, edges2=320, d=32, classes=8, batch=16
+        ),
+        "ogb_products": dict(nodes=400, edges=1600, d=16, classes=8),
+        "molecule": dict(batch=8, n_nodes=10, n_edges=20, d=16, classes=4),
+    }
+
+    variants = ("baseline", "sharded")
+
+    def __init__(self, name: str):
+        self.name = name
+
+    def shapes(self):
+        return dict(self._SHAPES)
+
+    def model_config(self, reduced: bool = False):
+        return gnn_mod.SAGEConfig(
+            n_layers=2,
+            d_in=-1,  # resolved per shape
+            d_hidden=32 if reduced else 128,
+            n_classes=-1,
+            sample_sizes=(25, 10),
+        )
+
+    @staticmethod
+    def _pad512(n: int) -> int:
+        return (n + 511) // 512 * 512
+
+    def _dims(self, cfg, shape):
+        return (self._DIMS_REDUCED if cfg.d_hidden < 128 else self._DIMS)[shape]
+
+    def _resolved(self, cfg, shape):
+        d = self._dims(cfg, shape)
+        return dataclasses.replace(cfg, d_in=d["d"], n_classes=d["classes"])
+
+    def init_params(self, key, cfg_shape):
+        return gnn_mod.init_sage(key, cfg_shape)
+
+    def input_specs(self, cfg, shape, variant: str = "baseline"):
+        d = self._dims(cfg, shape)
+        f32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
+        i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+        if shape in ("full_graph_sm", "ogb_products"):
+            if variant == "sharded":
+                # Nodes padded to a 512 multiple (even shards); edges binned
+                # by dst-owner with 1.3x per-bin headroom (-1 padding);
+                # agg0 = precomputed first-hop mean aggregate (SIGN trick).
+                n_pad = self._pad512(d["nodes"])
+                e_pad = self._pad512(int(d["edges"] * 1.3))
+                return {
+                    "feats": f32(n_pad, d["d"]),
+                    "agg0": f32(n_pad, d["d"]),
+                    "edges": i32(e_pad, 2),
+                    "labels": i32(n_pad),
+                }
+            return {
+                "feats": f32(d["nodes"], d["d"]),
+                "edges": i32(d["edges"], 2),
+                "labels": i32(d["nodes"]),
+            }
+        if shape == "minibatch_lg":
+            return {
+                "feats": f32(d["nodes"], d["d"]),
+                "hop0_src": i32(d["edges1"]), "hop0_dst": i32(d["edges1"]),
+                "hop1_src": i32(d["edges2"]), "hop1_dst": i32(d["edges2"]),
+                "labels": i32(d["batch"]),
+            }
+        return {
+            "feats": f32(d["batch"] * d["n_nodes"], d["d"]),
+            "edges": i32(d["batch"] * d["n_edges"], 2),
+            "graph_ids": i32(d["batch"] * d["n_nodes"]),
+            "labels": i32(d["batch"]),
+        }
+
+    def make_batch(self, cfg, shape, seed: int = 0):
+        from repro.data import graphs as G
+
+        d = self._dims(cfg, shape)
+        if shape in ("full_graph_sm", "ogb_products"):
+            g = G.make_graph(d["nodes"], d["edges"] - 8, d["d"], d["classes"], seed)
+            edges = np.full((d["edges"], 2), -1, np.int32)
+            edges[: g.edges.shape[0]] = g.edges  # tail = -1 padding
+            return {"feats": g.feats, "edges": edges, "labels": g.labels}
+        if shape == "minibatch_lg":
+            g = G.make_graph(d["nodes"], max(d["edges2"], 4 * d["nodes"]), d["d"],
+                             d["classes"], seed)
+            ptr, nbrs = G.to_csr(g.n_nodes, g.edges)
+            rng = np.random.default_rng(seed)
+            batch = rng.choice(g.n_nodes, size=d["batch"], replace=False)
+            sub = G.sample_subgraph(ptr, nbrs, g.feats, g.labels, batch, (15, 10), seed)
+            feats = np.zeros((d["nodes"], d["d"]), np.float32)
+            feats[: sub["feats"].shape[0]] = sub["feats"][: d["nodes"]]
+            def pad(a, n):
+                out = np.full(n, -1, np.int32)
+                out[: min(len(a), n)] = a[:n]
+                return out
+            return {
+                "feats": feats,
+                "hop0_src": pad(sub["hops"][0][0], d["edges1"]),
+                "hop0_dst": pad(sub["hops"][0][1], d["edges1"]),
+                "hop1_src": pad(sub["hops"][1][0], d["edges2"]),
+                "hop1_dst": pad(sub["hops"][1][1], d["edges2"]),
+                "labels": sub["labels"],
+            }
+        feats, edges, gids, labels = G.make_molecule_batch(
+            d["batch"], d["n_nodes"], d["n_edges"], d["d"], d["classes"], seed
+        )
+        return {"feats": feats, "edges": edges, "graph_ids": gids, "labels": labels}
+
+    def build_step(self, cfg, shape, shard_ctx=None, variant: str = "baseline"):
+        rcfg = self._resolved(cfg, shape)
+
+        if shape in ("full_graph_sm", "ogb_products"):
+            if variant == "sharded" and shard_ctx is not None:
+                n_nodes = self._pad512(self._dims(cfg, shape)["nodes"])
+
+                def loss(p, b):
+                    logits = gnn_mod.sage_forward_sharded(
+                        p, b["feats"], b["agg0"], b["edges"], rcfg, n_nodes,
+                        shard_ctx,
+                    )
+                    mask = b["labels"] >= 0
+                    per = gnn_mod.sage_loss_per_node(logits, jnp.clip(b["labels"], 0))
+                    return jnp.sum(per * mask) / jnp.maximum(mask.sum(), 1)
+
+                return make_train_step(loss, AdamWConfig()), "train"
+
+            def loss(p, b):
+                logits = gnn_mod.sage_forward(p, b["feats"], b["edges"], rcfg)
+                return gnn_mod.sage_loss(logits, b["labels"])
+        elif shape == "minibatch_lg":
+            def loss(p, b):
+                hops = [(b["hop0_src"], b["hop0_dst"]), (b["hop1_src"], b["hop1_dst"])]
+                logits = gnn_mod.sage_forward_sampled(
+                    p, b["feats"], hops, rcfg, b["labels"].shape[0]
+                )
+                return gnn_mod.sage_loss(logits, b["labels"])
+        else:
+            def loss(p, b):
+                logits = gnn_mod.sage_forward_graphs(
+                    p, b["feats"], b["edges"], b["graph_ids"],
+                    b["labels"].shape[0], rcfg,
+                )
+                return gnn_mod.sage_loss(logits, b["labels"])
+
+        return make_train_step(loss, AdamWConfig()), "train"
+
+    def param_pspecs(self, cfg, params, variant: str = "baseline", ctx=None):
+        del params, variant, ctx
+        return gnn_mod.sage_param_specs(cfg)
+
+    def batch_pspecs(self, cfg, shape, ctx: ShardCtx, variant: str = "baseline"):
+        da = ctx.data_axes
+        if shape in ("full_graph_sm", "ogb_products"):
+            if variant == "sharded":
+                return {
+                    "feats": P(da, None),
+                    "agg0": P(da, None),
+                    "edges": P(da, None),
+                    "labels": P(da),
+                }
+            return {"feats": P(), "edges": P(da, None), "labels": P()}
+        if shape == "minibatch_lg":
+            return {
+                "feats": P(),
+                "hop0_src": P(da), "hop0_dst": P(da),
+                "hop1_src": P(da), "hop1_dst": P(da),
+                "labels": P(),
+            }
+        return {"feats": P(), "edges": P(da, None), "graph_ids": P(), "labels": P()}
+
+    def model_flops_per_token(self, cfg):
+        # per-edge message cost dominates: 2 * d_in * d_hidden per edge.
+        return 0.0
+
+
+# ------------------------------------------------------------------ RecSys
+
+
+_REC_SHAPES = {
+    "train_batch": ShapeInfo("train_batch", "train", "global batch 65536"),
+    "serve_p99": ShapeInfo("serve_p99", "serve", "online batch 512"),
+    "serve_bulk": ShapeInfo("serve_bulk", "serve", "offline batch 262144"),
+    "retrieval_cand": ShapeInfo(
+        "retrieval_cand", "retrieval", "1 query vs 1M candidates"
+    ),
+}
+_REC_BATCH = {
+    "train_batch": 65536,
+    "serve_p99": 512,
+    "serve_bulk": 262144,
+    "retrieval_cand": 1,
+}
+_REC_BATCH_REDUCED = {
+    "train_batch": 64,
+    "serve_p99": 16,
+    "serve_bulk": 64,
+    "retrieval_cand": 1,
+}
+_REC_CANDIDATES = 1_000_000
+_REC_CANDIDATES_REDUCED = 2048
+
+
+class RecArch(Arch):
+    family = "recsys"
+
+    def __init__(self, name, full_cfg, reduced_cfg):
+        self.name = name
+        self._full = full_cfg
+        self._reduced = reduced_cfg
+
+    def shapes(self):
+        return dict(_REC_SHAPES)
+
+    def model_config(self, reduced: bool = False):
+        return self._reduced() if reduced else self._full()
+
+    def init_params(self, key, cfg):
+        return rec_mod.init_rec(key, cfg)
+
+    def _is_reduced(self, cfg):
+        return cfg.name.endswith("-smoke")
+
+    def _feature_specs(self, cfg, B: int, train: bool):
+        i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+        f32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
+        out: dict[str, Any] = {}
+        if cfg.arch in ("bst", "mind", "bert4rec"):
+            out["history"] = i32(B, cfg.seq_len)
+        if cfg.arch in ("bst", "mind", "bert4rec"):
+            out["target"] = i32(B)
+        if cfg.arch in ("bst", "autoint"):
+            out["fields"] = i32(B, cfg.n_fields)
+        if train:
+            if cfg.arch in ("bst", "autoint"):
+                out["label"] = f32(B)
+            if cfg.arch == "bert4rec":
+                m = max(1, cfg.seq_len // 10)
+                out["mask_positions"] = i32(B, m)
+                out["mask_labels"] = i32(B, m)
+                out.pop("target")
+        return out
+
+    def input_specs(self, cfg, shape):
+        B = (_REC_BATCH_REDUCED if self._is_reduced(cfg) else _REC_BATCH)[shape]
+        specs = self._feature_specs(cfg, B, train=shape == "train_batch")
+        if shape == "retrieval_cand":
+            C = _REC_CANDIDATES_REDUCED if self._is_reduced(cfg) else _REC_CANDIDATES
+            specs["candidates"] = jax.ShapeDtypeStruct((C,), jnp.int32)
+        return specs
+
+    def make_batch(self, cfg, shape, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        specs = self.input_specs(cfg, shape)
+        out = {}
+        for k, s in specs.items():
+            if k == "label":
+                out[k] = rng.integers(0, 2, size=s.shape).astype(np.float32)
+            elif k == "history":
+                out[k] = rng.integers(-1, cfg.n_items, size=s.shape).astype(np.int32)
+            elif k in ("target", "candidates", "mask_labels"):
+                out[k] = rng.integers(0, cfg.n_items, size=s.shape).astype(np.int32)
+            elif k == "mask_positions":
+                out[k] = rng.integers(0, cfg.seq_len, size=s.shape).astype(np.int32)
+            elif k == "fields":
+                out[k] = rng.integers(0, cfg.field_vocab, size=s.shape).astype(
+                    np.int32
+                )
+            else:
+                raise KeyError(k)
+        return out
+
+    def build_step(self, cfg, shape, shard_ctx=None):
+        if shape == "train_batch":
+            loss = lambda p, b: rec_mod.rec_train_loss(p, b, cfg, shard_ctx)
+            return make_train_step(loss, AdamWConfig()), "train"
+        if shape in ("serve_p99", "serve_bulk"):
+            def serve(params, batch):
+                return rec_mod.rec_serve_scores(params, batch, cfg, shard_ctx)
+            return serve, "serve"
+
+        def retrieve(params, batch):
+            feats = {k: v for k, v in batch.items() if k != "candidates"}
+            return rec_mod.rec_retrieval_scores(
+                params, feats, batch["candidates"], cfg, shard_ctx
+            )
+        return retrieve, "serve"
+
+    def param_pspecs(self, cfg, params):
+        return rec_mod.rec_param_specs(params, cfg)
+
+    def batch_pspecs(self, cfg, shape, ctx: ShardCtx):
+        da = ctx.data_axes
+        specs = self.input_specs(cfg, shape)
+        out = {}
+        for k, s in specs.items():
+            if k == "candidates":
+                out[k] = P(da)  # candidates sharded; the user side is batch-1
+            elif len(s.shape) >= 1 and s.shape[0] > 1:
+                out[k] = P(da, *([None] * (len(s.shape) - 1)))
+            else:
+                out[k] = P(*([None] * len(s.shape)))
+        return out

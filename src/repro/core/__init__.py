@@ -1,0 +1,14 @@
+# The paper's primary contribution: cluster-skipping document-ordered
+# indexes with BoundSum range selection and anytime SLA-governed traversal.
+from repro.core.anytime import (  # noqa: F401
+    AnytimeResult,
+    Fixed,
+    Overshoot,
+    Predictive,
+    Reactive,
+    Undershoot,
+    run_query_anytime,
+)
+from repro.core.clustered_index import BLOCK, ClusteredIndex, build_index  # noqa: F401
+from repro.core.range_daat import Engine, TopKState, device_traverse  # noqa: F401
+from repro.core.reorder import Arrangement, arrange  # noqa: F401

@@ -1,0 +1,100 @@
+"""BM25 term-document contributions (paper §4.3: k1=0.4, b=0.9).
+
+The first-stage ranker is additive over query terms:
+    S(Q, d) = sum_t C(t, d)
+with the BM25 contribution
+    C(t, d) = idf(t) * tf * (k1 + 1) / (tf + k1 * (1 - b + b * len_d / avg_len))
+
+All contributions are computed once at index-build time (numpy, host side)
+and quantized to b-bit integer *impacts* (see quantize.py) — the engine then
+works in integer space end-to-end, exactly like the paper's JASS arm, and the
+PISA arm's float scores are a monotone rescaling of the same values.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.data.synth import Corpus
+
+__all__ = ["BM25Params", "bm25_contributions", "invert"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BM25Params:
+    k1: float = 0.4
+    b: float = 0.9
+
+
+@dataclasses.dataclass(frozen=True)
+class Postings:
+    """Document-ordered postings in CSR-by-term layout."""
+
+    n_terms: int
+    n_docs: int
+    ptr: np.ndarray  # [n_terms+1] int64
+    docs: np.ndarray  # [nnz] int32, ascending within each term
+    scores: np.ndarray  # [nnz] float32, BM25 contribution C(t, d)
+
+    @property
+    def nnz(self) -> int:
+        return int(self.docs.shape[0])
+
+    def term_slice(self, t: int) -> tuple[np.ndarray, np.ndarray]:
+        s, e = self.ptr[t], self.ptr[t + 1]
+        return self.docs[s:e], self.scores[s:e]
+
+
+def bm25_contributions(corpus: Corpus, params: BM25Params = BM25Params()) -> np.ndarray:
+    """Per-posting BM25 contribution aligned with corpus CSR order."""
+    doc_lens = corpus.doc_lens.astype(np.float64)
+    avg_len = max(doc_lens.mean(), 1.0)
+    df = np.zeros(corpus.n_terms, dtype=np.int64)
+    np.add.at(df, corpus.doc_terms, 1)
+    # Lucene/Anserini-style non-negative idf.
+    idf = np.log(1.0 + (corpus.n_docs - df + 0.5) / (df + 0.5))
+
+    doc_of_posting = np.repeat(np.arange(corpus.n_docs), np.diff(corpus.doc_ptr))
+    tf = corpus.doc_tfs.astype(np.float64)
+    norm = params.k1 * (1.0 - params.b + params.b * doc_lens[doc_of_posting] / avg_len)
+    contrib = idf[corpus.doc_terms] * tf * (params.k1 + 1.0) / (tf + norm)
+    return contrib.astype(np.float32)
+
+
+def invert(
+    corpus: Corpus,
+    doc_order: np.ndarray | None = None,
+    params: BM25Params = BM25Params(),
+) -> Postings:
+    """Build document-ordered postings under a docid permutation.
+
+    ``doc_order[new_id] = old_id`` — i.e. the permutation produced by the
+    reordering stage. Postings come out sorted by (term, new docid).
+    """
+    contrib = bm25_contributions(corpus, params)
+    doc_of_posting = np.repeat(
+        np.arange(corpus.n_docs), np.diff(corpus.doc_ptr)
+    ).astype(np.int64)
+    if doc_order is None:
+        new_ids = doc_of_posting
+    else:
+        inv = np.empty(corpus.n_docs, dtype=np.int64)
+        inv[doc_order] = np.arange(corpus.n_docs)
+        new_ids = inv[doc_of_posting]
+
+    terms = corpus.doc_terms.astype(np.int64)
+    key = terms * corpus.n_docs + new_ids
+    order = np.argsort(key, kind="stable")
+    sorted_terms = terms[order]
+    ptr = np.zeros(corpus.n_terms + 1, dtype=np.int64)
+    counts = np.bincount(sorted_terms, minlength=corpus.n_terms)
+    ptr[1:] = np.cumsum(counts)
+    return Postings(
+        n_terms=corpus.n_terms,
+        n_docs=corpus.n_docs,
+        ptr=ptr,
+        docs=new_ids[order].astype(np.int32),
+        scores=contrib[order],
+    )

@@ -1,0 +1,33 @@
+"""BoundSum range selection (paper §3 "Range Selection").
+
+For query q and ranges 1..R, score(r) = sum_{t in q} U[t, r]; ranges are
+processed in decreasing score order. The whole computation is an R-vector
+gather-sum per term plus one sort — the paper's point is that this is cheap
+enough to run inline at query time (unlike a CSI or a learned LTRR model),
+and its cost IS included in all our measurements, as in the paper.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["bound_sums", "range_order"]
+
+
+@jax.jit
+def bound_sums(bounds_dense: jnp.ndarray, q_terms: jnp.ndarray) -> jnp.ndarray:
+    """Sum of per-range upper bounds over query terms. q_terms -1-padded."""
+    valid = (q_terms >= 0)[:, None]
+    rows = bounds_dense[jnp.clip(q_terms, 0, bounds_dense.shape[0] - 1)]
+    return jnp.sum(jnp.where(valid, rows, 0), axis=0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("descending",))
+def range_order(bsums: jnp.ndarray, descending: bool = True):
+    """Sorted range ids and their bounds (ties broken by range id)."""
+    key = -bsums if descending else bsums
+    order = jnp.argsort(key, stable=True).astype(jnp.int32)
+    return order, bsums[order]

@@ -1,0 +1,303 @@
+"""Cluster-skipping inverted index (paper §3, Figs 2-4).
+
+Host-side structure (numpy, built offline):
+
+  * document-ordered postings, CSR by term, docids under the arrangement's
+    permutation, impacts globally quantized to b bits;
+  * fixed-width posting *blocks* (BLOCK=128, the paper's SIMD-BP128 geometry
+    and the TPU lane width) that never cross a range boundary, each with
+    max-docid and max-impact metadata — this is the skip structure that makes
+    SeekGEQ an O(1) indexed access in either direction;
+  * a (term, range) directory with the per-range upper bounds U[t, r] used by
+    BoundSum and by safe early termination;
+  * the cluster map (range_ends) — the paper's C vector.
+
+Device-side mirror (`DeviceIndex`) holds flat jnp arrays; traversal code in
+range_daat.py / saat.py consumes it. TPU adaptation notes in DESIGN.md §2.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+import pickle
+
+import numpy as np
+
+from repro.core.bm25 import BM25Params, Postings, invert
+from repro.core.quantize import Quantizer, fit_quantizer
+from repro.core.reorder import Arrangement, arrange
+from repro.data.synth import Corpus
+
+BLOCK = 128
+
+__all__ = ["BLOCK", "ClusteredIndex", "build_index", "build_index_cached"]
+
+
+@dataclasses.dataclass
+class ClusteredIndex:
+    n_docs: int
+    n_terms: int
+    arrangement: Arrangement
+    quantizer: Quantizer
+
+    # Postings, CSR by term (docids are *new* ids under the arrangement).
+    ptr: np.ndarray  # [V+1] int64
+    docs: np.ndarray  # [nnz] int32
+    impacts: np.ndarray  # [nnz] int32 (1 .. 2^b - 1)
+
+    # Blocks (never straddle a range boundary).
+    blk_start: np.ndarray  # [NB] int64 offset into docs/impacts
+    blk_len: np.ndarray  # [NB] int32 (<= BLOCK)
+    blk_maxdoc: np.ndarray  # [NB] int32
+    blk_maximp: np.ndarray  # [NB] int32
+    blk_term: np.ndarray  # [NB] int32
+    blk_range: np.ndarray  # [NB] int32
+
+    # (term, range) directory — CSR over terms.
+    tr_ptr: np.ndarray  # [V+1] int64
+    tr_range: np.ndarray  # [NTR] int32
+    tr_blk_start: np.ndarray  # [NTR] int64  (block-id range for this (t, r))
+    tr_blk_end: np.ndarray  # [NTR] int64
+    tr_bound: np.ndarray  # [NTR] int32  U[t, r]
+
+    # Dense helpers.
+    term_bound: np.ndarray  # [V] int32 — global U_t (WAND/MaxScore bounds)
+    bounds_dense: np.ndarray  # [V, R] int32 — U[t, r], 0 where absent
+
+    @property
+    def n_ranges(self) -> int:
+        return self.arrangement.n_ranges
+
+    @property
+    def n_blocks(self) -> int:
+        return int(self.blk_start.shape[0])
+
+    @property
+    def nnz(self) -> int:
+        return int(self.docs.shape[0])
+
+    @property
+    def range_ends(self) -> np.ndarray:
+        return self.arrangement.range_ends
+
+    @property
+    def range_starts(self) -> np.ndarray:
+        return self.arrangement.range_starts
+
+    @property
+    def max_range_size(self) -> int:
+        return int(self.arrangement.range_sizes.max())
+
+    # ---------------------------------------------------------------- space
+    def space_report(self) -> dict[str, float]:
+        """Logical space accounting in GiB at paper-matched widths (T2).
+
+        docids at 4 B, impacts at ceil(bits/8) B, block metadata, the sparse
+        (term, range) bound directory, listwise bounds, and the cluster map.
+        """
+        gib = 1 / (1024**3)
+        imp_bytes = (self.quantizer.bits + 7) // 8
+        postings = self.nnz * (4 + imp_bytes)
+        blocks = self.n_blocks * (8 + 4 + 4 + 4)  # start, len, maxdoc, maximp
+        rangewise = self.tr_range.shape[0] * (4 + imp_bytes) + 8 * (
+            self.n_terms + 1
+        )
+        listwise = self.n_terms * imp_bytes
+        cluster_map = self.n_ranges * 8
+        return {
+            "postings_gib": postings * gib,
+            "block_meta_gib": blocks * gib,
+            "listwise_bounds_gib": listwise * gib,
+            "rangewise_bounds_gib": rangewise * gib,
+            "cluster_map_gib": cluster_map * gib,
+            "total_gib": (postings + blocks + rangewise + listwise + cluster_map)
+            * gib,
+        }
+
+    # ------------------------------------------------------------- queries
+    def query_block_table(
+        self, q_terms: np.ndarray, pad_to: int | None = None
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Per-range padded block-id table for a query (host-side, cheap).
+
+        Returns (blk_ids [R, B] int64 with -1 padding, rest_bound [R, B]
+        int32) where ``rest_bound[r, j] = BoundSum(r) - U[t_j, r]`` for the
+        term owning block j — the quantity needed for block-level pruning
+        (DESIGN.md §2: per-block bound = blk_maximp + rest_bound).
+        """
+        q = [int(t) for t in q_terms if t >= 0]
+        R = self.n_ranges
+        per_range: list[list[int]] = [[] for _ in range(R)]
+        rests: list[list[int]] = [[] for _ in range(R)]
+        bsum = self.bounds_dense[q].sum(axis=0).astype(np.int64) if q else np.zeros(R, np.int64)
+        for t in q:
+            s, e = self.tr_ptr[t], self.tr_ptr[t + 1]
+            for i in range(s, e):
+                r = int(self.tr_range[i])
+                rest = int(bsum[r] - self.tr_bound[i])
+                for b in range(int(self.tr_blk_start[i]), int(self.tr_blk_end[i])):
+                    per_range[r].append(b)
+                    rests[r].append(rest)
+        width = max((len(x) for x in per_range), default=1)
+        width = max(width, 1)
+        if pad_to is not None:
+            width = max(width, pad_to)
+        blk = np.full((R, width), -1, dtype=np.int64)
+        rest = np.zeros((R, width), dtype=np.int32)
+        for r in range(R):
+            n = len(per_range[r])
+            if n:
+                blk[r, :n] = per_range[r]
+                rest[r, :n] = rests[r]
+        return blk, rest
+
+    def fingerprint(self) -> str:
+        h = hashlib.sha1()
+        for a in (self.ptr, self.docs, self.impacts, self.range_ends):
+            h.update(np.ascontiguousarray(a).tobytes())
+        return h.hexdigest()[:16]
+
+
+def _build_blocks(
+    post: Postings,
+    impacts: np.ndarray,
+    range_ends: np.ndarray,
+) -> tuple[np.ndarray, ...]:
+    """Split every term's postings into <=BLOCK runs within range boundaries."""
+    starts: list[int] = []
+    lens: list[int] = []
+    maxdoc: list[int] = []
+    maximp: list[int] = []
+    bterm: list[int] = []
+    brange: list[int] = []
+    tr_rows: list[tuple[int, int, int, int, int]] = []  # term, range, b0, b1, bound
+
+    for t in range(post.n_terms):
+        s, e = int(post.ptr[t]), int(post.ptr[t + 1])
+        if s == e:
+            continue
+        d = post.docs[s:e]
+        # Range id per posting; postings are docid-sorted so ranges appear as runs.
+        rid = np.searchsorted(range_ends, d, side="right")
+        run_starts = np.concatenate([[0], np.nonzero(np.diff(rid))[0] + 1])
+        run_ends = np.concatenate([run_starts[1:], [d.shape[0]]])
+        for rs, re_ in zip(run_starts, run_ends):
+            r = int(rid[rs])
+            b0 = len(starts)
+            bound = 0
+            for off in range(rs, re_, BLOCK):
+                hi = min(off + BLOCK, re_)
+                starts.append(s + off)
+                lens.append(hi - off)
+                maxdoc.append(int(d[hi - 1]))
+                mi = int(impacts[s + off : s + hi].max())
+                maximp.append(mi)
+                bound = max(bound, mi)
+                bterm.append(t)
+                brange.append(r)
+            tr_rows.append((t, r, b0, len(starts), bound))
+
+    return (
+        np.asarray(starts, dtype=np.int64),
+        np.asarray(lens, dtype=np.int32),
+        np.asarray(maxdoc, dtype=np.int32),
+        np.asarray(maximp, dtype=np.int32),
+        np.asarray(bterm, dtype=np.int32),
+        np.asarray(brange, dtype=np.int32),
+        tr_rows,
+    )
+
+
+def build_index(
+    corpus: Corpus,
+    arrangement: Arrangement | None = None,
+    n_ranges: int = 32,
+    strategy: str = "clustered_bp",
+    bits: int = 8,
+    params: BM25Params = BM25Params(),
+    seed: int = 0,
+    quantizer: Quantizer | None = None,
+) -> ClusteredIndex:
+    """Build the cluster-skipping index.
+
+    ``quantizer`` may be supplied to share one global impact scale across
+    sub-indexes (required when merging scores across shards — §7.2).
+    """
+    if arrangement is None:
+        arrangement = arrange(corpus, n_ranges=n_ranges, strategy=strategy, seed=seed)
+    post = invert(corpus, arrangement.doc_order, params)
+    quant = quantizer or fit_quantizer(post.scores, bits=bits)
+    impacts = quant.quantize(post.scores)
+
+    (
+        blk_start,
+        blk_len,
+        blk_maxdoc,
+        blk_maximp,
+        blk_term,
+        blk_range,
+        tr_rows,
+    ) = _build_blocks(post, impacts, arrangement.range_ends)
+
+    V = corpus.n_terms
+    R = arrangement.n_ranges
+    tr_ptr = np.zeros(V + 1, dtype=np.int64)
+    tr_term = np.asarray([r[0] for r in tr_rows], dtype=np.int32)
+    counts = np.bincount(tr_term, minlength=V) if tr_rows else np.zeros(V, np.int64)
+    tr_ptr[1:] = np.cumsum(counts)
+    tr_range = np.asarray([r[1] for r in tr_rows], dtype=np.int32)
+    tr_blk_start = np.asarray([r[2] for r in tr_rows], dtype=np.int64)
+    tr_blk_end = np.asarray([r[3] for r in tr_rows], dtype=np.int64)
+    tr_bound = np.asarray([r[4] for r in tr_rows], dtype=np.int32)
+
+    bounds_dense = np.zeros((V, R), dtype=np.int32)
+    if tr_rows:
+        bounds_dense[tr_term, tr_range] = tr_bound
+    term_bound = bounds_dense.max(axis=1) if R else np.zeros(V, np.int32)
+
+    return ClusteredIndex(
+        n_docs=corpus.n_docs,
+        n_terms=V,
+        arrangement=arrangement,
+        quantizer=quant,
+        ptr=post.ptr,
+        docs=post.docs,
+        impacts=impacts,
+        blk_start=blk_start,
+        blk_len=blk_len,
+        blk_maxdoc=blk_maxdoc,
+        blk_maximp=blk_maximp,
+        blk_term=blk_term,
+        blk_range=blk_range,
+        tr_ptr=tr_ptr,
+        tr_range=tr_range,
+        tr_blk_start=tr_blk_start,
+        tr_blk_end=tr_blk_end,
+        tr_bound=tr_bound,
+        term_bound=term_bound.astype(np.int32),
+        bounds_dense=bounds_dense,
+    )
+
+
+def build_index_cached(
+    corpus: Corpus,
+    cache_dir: str = ".cache",
+    **kwargs,
+) -> ClusteredIndex:
+    """Disk-cached index build (BP + k-means are the slow offline steps)."""
+    key = hashlib.sha1(
+        (corpus.fingerprint() + repr(sorted(kwargs.items()))).encode()
+    ).hexdigest()[:16]
+    path = os.path.join(cache_dir, f"index_{key}.pkl")
+    if os.path.exists(path):
+        with open(path, "rb") as f:
+            return pickle.load(f)
+    idx = build_index(corpus, **kwargs)
+    os.makedirs(cache_dir, exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        pickle.dump(idx, f)
+    os.replace(tmp, path)
+    return idx

@@ -1,0 +1,378 @@
+"""Range-aware anytime DAAT traversal (paper §3, DESIGN.md §2).
+
+Two execution modes over the same per-range scoring step:
+
+  * host-driven — one jitted ``score_range_step`` per range with the go/no-go
+    decision taken on the host between steps (the paper's steady_clock loop;
+    this is also how a real TPU deployment would interleave device steps with
+    SLA decisions), used by core.anytime;
+  * device-driven — ``device_traverse`` runs the whole query in a
+    ``lax.while_loop`` with a postings budget (the deterministic JASS-style
+    proxy), fully jittable and vmappable for batched serving.
+
+Baselines share this engine via flags (DESIGN.md §2 table):
+  ordering="boundsum"|"docid"  ×  bounds="range"|"global"  ×  safe/budget/fixed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bound_sum
+from repro.core.clustered_index import BLOCK, ClusteredIndex
+from repro.kernels.range_scorer import ops as scorer_ops
+
+__all__ = [
+    "DeviceIndex",
+    "TopKState",
+    "QueryPlan",
+    "Engine",
+    "init_state",
+    "score_range_step",
+    "device_traverse",
+]
+
+
+class DeviceIndex(NamedTuple):
+    """jnp mirror of the host index (flat arrays only — a valid pytree)."""
+
+    docs: jnp.ndarray  # [nnz] int32
+    impacts: jnp.ndarray  # [nnz] int32
+    blk_start: jnp.ndarray  # [NB] int32
+    blk_len: jnp.ndarray  # [NB] int32
+    blk_maximp: jnp.ndarray  # [NB] int32
+    bounds_dense: jnp.ndarray  # [V, R] int32
+    range_starts: jnp.ndarray  # [R] int32
+    range_sizes: jnp.ndarray  # [R] int32
+
+
+class TopKState(NamedTuple):
+    vals: jnp.ndarray  # [k] int32, sorted descending (0 = empty slot)
+    ids: jnp.ndarray  # [k] int32 (-1 = empty)
+    postings: jnp.ndarray  # scalar int32 — postings scored so far
+    blocks: jnp.ndarray  # scalar int32 — blocks processed so far
+
+
+def init_state(k: int) -> TopKState:
+    return TopKState(
+        vals=jnp.zeros((k,), jnp.int32),
+        ids=jnp.full((k,), -1, jnp.int32),
+        postings=jnp.zeros((), jnp.int32),
+        blocks=jnp.zeros((), jnp.int32),
+    )
+
+
+def theta(state: TopKState) -> jnp.ndarray:
+    """Heap-entry threshold: k-th largest score so far (0 while unfilled)."""
+    return state.vals[-1]
+
+
+def _merge_topk(
+    vals_a: jnp.ndarray,
+    ids_a: jnp.ndarray,
+    vals_b: jnp.ndarray,
+    ids_b: jnp.ndarray,
+    k: int,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Deterministic top-k merge: higher score first, then smaller docid.
+
+    A stable lexsort over (score desc, docid asc) makes tie-breaking
+    identical to the host oracle, so safe traversals reproduce the oracle
+    ranking *exactly*, not merely as a score multiset. Sorting 2k int32
+    elements is cheap (k <= 1000) and stays in int32 for the TPU target.
+    """
+    v = jnp.concatenate([vals_a, vals_b])
+    i = jnp.concatenate([ids_a, ids_b])
+    i_key = jnp.where(i >= 0, i, jnp.iinfo(jnp.int32).max)  # empties last
+    order = jnp.lexsort((i_key, -v))
+    sel = order[:k]
+    return v[sel], i[sel]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("s_pad", "k", "impl", "prune_blocks", "interpret")
+)
+def score_range_step(
+    dix: DeviceIndex,
+    state: TopKState,
+    blk_ids: jnp.ndarray,  # [B] int32/int64, -1 padded
+    rest: jnp.ndarray,  # [B] int32 — bound sum of *other* terms for pruning
+    range_start: jnp.ndarray,  # scalar int32
+    *,
+    s_pad: int,
+    k: int,
+    impl: str = "xla",
+    prune_blocks: bool = True,
+    interpret: bool = True,
+) -> TopKState:
+    """Score one range and merge its top-k into the running state."""
+    th = theta(state)
+    safe_ids = jnp.clip(blk_ids, 0).astype(jnp.int32)
+    starts = dix.blk_start[safe_ids]
+    lens = dix.blk_len[safe_ids]
+    maximp = dix.blk_maximp[safe_ids]
+    keep = blk_ids >= 0
+    if prune_blocks:
+        # Block-level refinement (paper "Improved Pruning With Local Range
+        # Bounds"): a block survives only if its own max impact plus the other
+        # terms' bounds can beat the current threshold.
+        keep = keep & (maximp + rest > th)
+
+    acc = scorer_ops.score_blocks(
+        dix.docs,
+        dix.impacts,
+        starts,
+        lens,
+        keep,
+        range_start,
+        s_pad=s_pad,
+        impl=impl,
+        interpret=interpret,
+    )
+
+    vals, loc = jax.lax.top_k(acc, k)
+    cand_ids = jnp.where(vals > 0, loc.astype(jnp.int32) + range_start, -1)
+    nv, ni = _merge_topk(state.vals, state.ids, vals.astype(jnp.int32), cand_ids, k)
+    return TopKState(
+        vals=nv,
+        ids=ni,
+        postings=state.postings + jnp.sum(jnp.where(keep, lens, 0), dtype=jnp.int32),
+        blocks=state.blocks + jnp.sum(keep, dtype=jnp.int32),
+    )
+
+
+class TraverseResult(NamedTuple):
+    state: TopKState
+    ranges_processed: jnp.ndarray  # int32
+    exit_safe: jnp.ndarray  # bool — stopped because remaining bounds <= theta
+    exit_budget: jnp.ndarray  # bool — stopped by postings budget / fixed-n
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("s_pad", "k", "impl", "prune_blocks", "safe_stop", "interpret"),
+)
+def device_traverse(
+    dix: DeviceIndex,
+    blk_tab: jnp.ndarray,  # [R, B] int32, -1 padded — per-range block ids
+    rest_tab: jnp.ndarray,  # [R, B] int32
+    order: jnp.ndarray,  # [R] int32 — processing order of ranges
+    ordered_bounds: jnp.ndarray,  # [R] int32 — BoundSum of order[i] (0 if unused)
+    *,
+    s_pad: int,
+    k: int,
+    budget_postings: jnp.ndarray | int = 2**31 - 1,
+    max_ranges: jnp.ndarray | int = 2**31 - 1,
+    safe_stop: bool = True,
+    prune_blocks: bool = True,
+    impl: str = "xla",
+    interpret: bool = True,
+) -> TraverseResult:
+    """Whole-query traversal in a lax.while_loop (device-side anytime mode)."""
+    R = blk_tab.shape[0]
+    budget = jnp.asarray(budget_postings, jnp.int32)
+    maxr = jnp.asarray(max_ranges, jnp.int32)
+
+    def cond(carry):
+        i, state, stop_safe, stop_budget = carry
+        return (i < R) & ~stop_safe & ~stop_budget
+
+    def body(carry):
+        i, state, stop_safe, stop_budget = carry
+        r = order[i]
+        bound = ordered_bounds[i]
+        th = theta(state)
+        # Safe termination: every remaining range is bounded by this one.
+        s_safe = safe_stop & (bound <= th) & (th > 0)
+        s_budget = (state.postings >= budget) | (i >= maxr)
+        do = ~(s_safe | s_budget)
+
+        def run(st):
+            return score_range_step(
+                dix,
+                st,
+                blk_tab[r],
+                rest_tab[r],
+                dix.range_starts[r],
+                s_pad=s_pad,
+                k=k,
+                impl=impl,
+                prune_blocks=prune_blocks,
+                interpret=interpret,
+            )
+
+        state = jax.lax.cond(do, run, lambda st: st, state)
+        return (i + jnp.where(do, 1, 0), state, s_safe, s_budget)
+
+    i0 = jnp.zeros((), jnp.int32)
+    carry = (i0, init_state(k), jnp.zeros((), bool), jnp.zeros((), bool))
+    i, state, s_safe, s_budget = jax.lax.while_loop(cond, body, carry)
+    return TraverseResult(
+        state=state, ranges_processed=i, exit_safe=s_safe, exit_budget=s_budget
+    )
+
+
+# --------------------------------------------------------------------------
+# Host-facing engine
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryPlan:
+    """Device-ready per-query traversal inputs."""
+
+    q_terms: np.ndarray  # [L] int32, -1 padded
+    blk_tab: jnp.ndarray  # [R, B] int32
+    rest_tab: jnp.ndarray  # [R, B] int32
+    order: jnp.ndarray  # [R] int32
+    ordered_bounds: jnp.ndarray  # [R] int32
+    order_host: np.ndarray  # same as order, on host
+    bounds_host: np.ndarray  # ordered bounds, on host
+
+
+def _next_pow2(n: int, lo: int = 32) -> int:
+    v = lo
+    while v < n:
+        v *= 2
+    return v
+
+
+class Engine:
+    """Cluster-skipping anytime query engine over a built index.
+
+    ``ordering``: "boundsum" (the paper's proposal) or "docid" (range-
+    oblivious baseline). ``bounds``: "range" (U[t,r], enables safe stop and
+    tight block pruning) or "global" (listwise U_t only — the Default-index
+    baseline; safe stop then uses the whole-collection bound).
+    """
+
+    def __init__(
+        self,
+        index: ClusteredIndex,
+        k: int = 10,
+        ordering: str = "boundsum",
+        bounds: str = "range",
+        impl: str = "xla",
+        interpret: bool = True,
+    ):
+        self.index = index
+        self.k = k
+        self.ordering = ordering
+        self.bounds = bounds
+        self.impl = impl
+        self.interpret = interpret
+        self.s_pad = int(
+            (index.max_range_size + BLOCK - 1) // BLOCK * BLOCK
+        ) or BLOCK
+        self.dix = DeviceIndex(
+            docs=jnp.asarray(index.docs, jnp.int32),
+            impacts=jnp.asarray(index.impacts, jnp.int32),
+            blk_start=jnp.asarray(index.blk_start, jnp.int32),
+            blk_len=jnp.asarray(index.blk_len, jnp.int32),
+            blk_maximp=jnp.asarray(index.blk_maximp, jnp.int32),
+            bounds_dense=jnp.asarray(index.bounds_dense, jnp.int32),
+            range_starts=jnp.asarray(index.range_starts, jnp.int32),
+            range_sizes=jnp.asarray(index.arrangement.range_sizes, jnp.int32),
+        )
+
+    # ------------------------------------------------------------- planning
+    def plan(self, q_terms: np.ndarray) -> QueryPlan:
+        q = np.asarray(q_terms, dtype=np.int32).reshape(-1)
+        blk, rest_range = self.index.query_block_table(q)
+        R, width = blk.shape
+        pad = _next_pow2(width)
+        if pad != width:
+            blk = np.pad(blk, ((0, 0), (0, pad - width)), constant_values=-1)
+            rest_range = np.pad(rest_range, ((0, 0), (0, pad - width)))
+
+        bsums = self.index.bounds_dense[q[q >= 0]].sum(axis=0).astype(np.int64)
+        if self.bounds == "global":
+            # Listwise bounds only: rest = sum of other terms' GLOBAL bounds.
+            gsum = int(self.index.term_bound[q[q >= 0]].sum())
+            rest = np.where(
+                blk >= 0,
+                gsum - self.index.term_bound[self.index.blk_term[blk.clip(0)]],
+                0,
+            ).astype(np.int32)
+            # Safe stop bound per range = whole-collection bound (loose).
+            per_range_bound = np.full(R, gsum, dtype=np.int64)
+        else:
+            rest = rest_range.astype(np.int32)
+            per_range_bound = bsums
+
+        if self.ordering == "boundsum":
+            order = np.argsort(-bsums, kind="stable").astype(np.int32)
+        elif self.ordering == "docid":
+            order = np.arange(R, dtype=np.int32)
+        else:
+            raise ValueError(f"unknown ordering {self.ordering!r}")
+        ordered_bounds = per_range_bound[order].astype(np.int32)
+
+        return QueryPlan(
+            q_terms=q,
+            blk_tab=jnp.asarray(blk, jnp.int32),
+            rest_tab=jnp.asarray(rest, jnp.int32),
+            order=jnp.asarray(order, jnp.int32),
+            ordered_bounds=jnp.asarray(ordered_bounds, jnp.int32),
+            order_host=order,
+            bounds_host=np.asarray(ordered_bounds, dtype=np.int64),
+        )
+
+    # ------------------------------------------------------- execution modes
+    def init_state(self) -> TopKState:
+        return init_state(self.k)
+
+    def step(self, plan: QueryPlan, state: TopKState, i: int) -> TopKState:
+        """Host-driven: score the i-th range of the plan's order."""
+        r = int(plan.order_host[i])
+        return score_range_step(
+            self.dix,
+            state,
+            plan.blk_tab[r],
+            plan.rest_tab[r],
+            self.dix.range_starts[r],
+            s_pad=self.s_pad,
+            k=self.k,
+            impl=self.impl,
+            prune_blocks=True,
+            interpret=self.interpret,
+        )
+
+    def traverse(
+        self,
+        plan: QueryPlan,
+        budget_postings: int = 2**31 - 1,
+        max_ranges: int = 2**31 - 1,
+        safe_stop: bool = True,
+        prune_blocks: bool = True,
+    ) -> TraverseResult:
+        """Device-driven whole-query traversal."""
+        return device_traverse(
+            self.dix,
+            plan.blk_tab,
+            plan.rest_tab,
+            plan.order,
+            plan.ordered_bounds,
+            s_pad=self.s_pad,
+            k=self.k,
+            budget_postings=budget_postings,
+            max_ranges=max_ranges,
+            safe_stop=safe_stop,
+            prune_blocks=prune_blocks,
+            impl=self.impl,
+            interpret=self.interpret,
+        )
+
+    # ----------------------------------------------------------------- util
+    def topk_docs(self, state: TopKState) -> tuple[np.ndarray, np.ndarray]:
+        """(docids, scores) with empty slots stripped, host-side."""
+        vals = np.asarray(state.vals)
+        ids = np.asarray(state.ids)
+        keep = ids >= 0
+        return ids[keep], vals[keep]

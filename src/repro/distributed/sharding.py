@@ -1,0 +1,54 @@
+"""Mesh/sharding context shared by models, trainer, and dry-run."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["ShardCtx", "named", "data_spec"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Which mesh axes carry data parallelism and which carry model/TP/EP.
+
+    data_axes is ("pod", "data") on the multi-pod mesh, ("data",) otherwise.
+    """
+
+    mesh: Mesh
+    data_axes: tuple = ("data",)
+    model_axis: str = "model"
+
+    @property
+    def n_model(self) -> int:
+        return self.mesh.shape[self.model_axis]
+
+    @property
+    def n_data(self) -> int:
+        n = 1
+        for a in self.data_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def sharding(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+
+def named(ctx: ShardCtx | None, tree, specs):
+    """Apply with_sharding_constraint when a ctx is present (no-op locally)."""
+    if ctx is None:
+        return tree
+    return jax.tree.map(
+        lambda x, s: jax.lax.with_sharding_constraint(x, ctx.sharding(s)),
+        tree,
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def data_spec(ctx: ShardCtx, *trailing) -> P:
+    """Batch-sharded spec: first dim over all data axes."""
+    return P(ctx.data_axes, *trailing)

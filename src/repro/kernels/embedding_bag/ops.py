@@ -1,0 +1,26 @@
+"""Jitted wrapper for the fused bag-reduce kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.kernel import bag_reduce_pallas
+from repro.kernels.embedding_bag.ref import bag_reduce_ref
+
+__all__ = ["bag_reduce"]
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "interpret"))
+def bag_reduce(
+    rows: jnp.ndarray,
+    weights: jnp.ndarray,
+    *,
+    impl: str = "pallas",
+    interpret: bool = True,
+) -> jnp.ndarray:
+    if impl == "xla":
+        return bag_reduce_ref(rows, weights)
+    return bag_reduce_pallas(rows, weights, interpret=interpret)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the fused bag-reduce: out[b] = sum_l w[b,l]*rows[b,l]."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["bag_reduce_ref"]
+
+
+def bag_reduce_ref(rows: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """rows [B, L, D], weights [B, L] -> [B, D]."""
+    return jnp.einsum("bld,bl->bd", rows, weights)

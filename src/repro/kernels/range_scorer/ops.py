@@ -1,0 +1,46 @@
+"""Jitted public wrapper for the range scorer.
+
+``score_blocks`` is the one entry point the traversal engine calls; ``impl``
+selects the XLA scatter path (fast on CPU, the oracle) or the Pallas one-hot
+MXU kernel (the TPU target, validated in interpret mode).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.range_scorer import ref
+from repro.kernels.range_scorer.kernel import scatter_accumulate_pallas
+
+__all__ = ["score_blocks"]
+
+
+@functools.partial(jax.jit, static_argnames=("s_pad", "impl", "interpret"))
+def score_blocks(
+    post_docs: jnp.ndarray,
+    post_imps: jnp.ndarray,
+    starts: jnp.ndarray,
+    lens: jnp.ndarray,
+    keep: jnp.ndarray,
+    range_start: jnp.ndarray,
+    *,
+    s_pad: int,
+    impl: str = "xla",
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Accumulate surviving posting blocks into an int32 [s_pad] accumulator."""
+    if impl == "xla":
+        return ref.score_blocks_ref(
+            post_docs, post_imps, starts, lens, keep, range_start, s_pad
+        )
+    if impl == "pallas":
+        local, vals = ref.gather_block_postings(
+            post_docs, post_imps, starts, lens, keep, range_start
+        )
+        return scatter_accumulate_pallas(
+            local, vals, s_pad=s_pad, interpret=interpret
+        )
+    raise ValueError(f"unknown impl {impl!r}")

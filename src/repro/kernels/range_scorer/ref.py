@@ -1,0 +1,60 @@
+"""Pure-jnp oracle for the range scorer.
+
+Scores one document range: gathers the postings of the query's surviving
+blocks and scatter-adds quantized impacts into a range-local accumulator.
+This is the semantic reference the Pallas kernel must match exactly
+(integer impacts; float32 accumulation is exact below 2^24).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+BLOCK = 128  # postings per block; matches core.clustered_index.BLOCK
+
+__all__ = ["BLOCK", "gather_block_postings", "score_blocks_ref"]
+
+
+def gather_block_postings(
+    post_docs: jnp.ndarray,  # [nnz] int32 docids (new ids)
+    post_imps: jnp.ndarray,  # [nnz] int32 impacts
+    starts: jnp.ndarray,  # [B] int32/int64 block start offsets (-1 pad ok)
+    lens: jnp.ndarray,  # [B] int32 block lengths
+    keep: jnp.ndarray,  # [B] bool survives pruning
+    range_start: jnp.ndarray,  # scalar int32 first new-docid of the range
+):
+    """Gather block postings into dense [B*BLOCK] (local_id, value) pairs.
+
+    Invalid lanes get local_id = -1 and value = 0 so any downstream
+    accumulator drops them.
+    """
+    B = starts.shape[0]
+    lane = jnp.arange(BLOCK, dtype=jnp.int32)
+    offs = starts.astype(jnp.int32)[:, None] + lane[None, :]  # [B, BLOCK]
+    valid = (lane[None, :] < lens[:, None]) & keep[:, None] & (starts >= 0)[:, None]
+    nnz = post_docs.shape[0]
+    offs_c = jnp.clip(offs, 0, nnz - 1)
+    d = post_docs[offs_c]
+    v = post_imps[offs_c]
+    local = jnp.where(valid, d - range_start, -1).astype(jnp.int32)
+    vals = jnp.where(valid, v, 0).astype(jnp.int32)
+    return local.reshape(B * BLOCK), vals.reshape(B * BLOCK)
+
+
+def score_blocks_ref(
+    post_docs: jnp.ndarray,
+    post_imps: jnp.ndarray,
+    starts: jnp.ndarray,
+    lens: jnp.ndarray,
+    keep: jnp.ndarray,
+    range_start: jnp.ndarray,
+    s_pad: int,
+) -> jnp.ndarray:
+    """Accumulate surviving blocks into an int32 accumulator of size s_pad."""
+    local, vals = gather_block_postings(
+        post_docs, post_imps, starts, lens, keep, range_start
+    )
+    # local == -1 -> clamp to s_pad and drop via mode="drop".
+    tgt = jnp.where(local < 0, s_pad, local)
+    acc = jnp.zeros((s_pad,), jnp.int32)
+    return acc.at[tgt].add(vals, mode="drop")

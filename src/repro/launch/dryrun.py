@@ -1,0 +1,287 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below may import jax (512 placeholder devices locked in) ---
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this script:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod);
+  2. resolves the arch's full published config, param/optimizer/batch
+     PartitionSpecs (TP/EP via param_specs, ZeRO-1 via zero1_state_specs,
+     batch over (pod, data));
+  3. ``jax.jit(step).lower(...).compile()`` with ShapeDtypeStruct inputs —
+     no allocation anywhere;
+  4. records memory_analysis (fits-per-device proof), cost_analysis
+     (FLOPs/bytes for §Roofline), and the collective-byte census parsed
+     from the post-SPMD HLO (all-gather/all-reduce/reduce-scatter/
+     all-to-all/collective-permute operand sizes).
+
+Results go to benchmarks/results/dryrun/<arch>__<shape>__<mesh>.json; the
+roofline collator (launch/roofline.py) and EXPERIMENTS.md read from there.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k --mesh multi
+  python -m repro.launch.dryrun --all [--mesh both] [--force]
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import ARCHS, all_cells, get_arch
+from repro.launch.mesh import make_ctx, make_production_mesh
+from repro.optim.adamw import AdamWConfig, init_opt_state
+from repro.train.trainer import zero1_state_specs
+
+RESULTS_DIR = os.path.join("benchmarks", "results", "dryrun")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+_SHAPE_RE = re.compile(r"\b(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|s32|s16|s8|u64|u32|u16|u8|pred|c64|c128)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)\b"
+)
+
+
+def _shape_bytes(txt: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(txt):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_census(hlo_text: str) -> dict:
+    """Per-collective result bytes from the post-SPMD HLO.
+
+    The optimized HLO names operands without inline types, so we size each
+    collective by its RESULT type (the text between '=' and the op name) —
+    the per-device landed bytes. For all-reduce / all-to-all / permute this
+    equals the per-device payload; for all-gather it is the gathered size
+    (what crosses links into each device); ``-done`` halves of async pairs
+    are skipped so ops are not double-counted.
+    """
+    out: dict[str, int] = {}
+    count: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "=" not in line:
+            continue
+        if "-done" in line or "get-tuple-element" in line:
+            continue
+        kind = m.group(1)
+        rhs = line.split("=", 1)[1]
+        op_pos = rhs.find(kind)
+        if op_pos <= 0:
+            continue
+        result_txt = rhs[:op_pos]
+        b = _shape_bytes(result_txt)
+        if b == 0:
+            continue
+        out[kind] = out.get(kind, 0) + b
+        count[kind] = count.get(kind, 0) + 1
+    return {
+        "bytes_by_kind": out,
+        "count_by_kind": count,
+        "total_bytes": int(sum(out.values())),
+    }
+
+
+def _mem_dict(ma) -> dict:
+    keys = [
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+        "host_argument_size_in_bytes",
+        "peak_memory_in_bytes",
+    ]
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def _sds(tree, specs, mesh):
+    """Attach shardings to a ShapeDtypeStruct pytree."""
+    def one(x, s):
+        return jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=NamedSharding(mesh, s))
+
+    return jax.tree.map(
+        one, tree, specs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)
+    )
+
+
+def run_cell(arch_name: str, shape: str, mesh_kind: str,
+             variant: str = "baseline") -> dict:
+    t0 = time.time()
+    arch = get_arch(arch_name)
+    mesh = make_production_mesh(multi_pod=mesh_kind == "multi")
+    ctx = make_ctx(mesh)
+    cfg = arch.model_config(reduced=False)
+    if arch.family == "gnn":
+        cfg = arch._resolved(cfg, shape)
+    if hasattr(arch, "_with_variant"):
+        cfg = arch._with_variant(cfg, variant)
+
+    params_sh = arch.param_shapes(cfg)
+    if variant != "baseline":
+        if variant not in getattr(arch, "variants", ("baseline",)):
+            raise ValueError(f"{arch_name} does not support variant {variant}")
+        p_specs = arch.param_pspecs(cfg, params_sh, variant=variant, ctx=ctx)
+    else:
+        p_specs = arch.param_pspecs(cfg, params_sh)
+    if getattr(arch, "fsdp", False) and variant == "baseline":
+        # FSDP: shard every large param over the data axis on its first
+        # free divisible dim (on top of the TP spec). Small leaves stay
+        # replicated to avoid pathological tiny collectives.
+        from repro.train.trainer import zero1_spec
+
+        mesh_shape = dict(mesh.shape)
+
+        def _fsdp(spec, p):
+            if int(np.prod(p.shape)) < 65536:
+                return spec
+            return zero1_spec(spec, p.shape, ctx.n_data, ctx.data_axes, mesh_shape)
+
+        p_specs = jax.tree.map(
+            _fsdp, p_specs, params_sh, is_leaf=lambda x: isinstance(x, P)
+        )
+    if variant != "baseline":
+        step, kind = arch.build_step(cfg, shape, shard_ctx=ctx, variant=variant)
+        try:
+            batch_sh = arch.input_specs(cfg, shape, variant=variant)
+        except TypeError:
+            batch_sh = arch.input_specs(cfg, shape)
+        b_specs = arch.batch_pspecs(cfg, shape, ctx, variant=variant)
+    else:
+        step, kind = arch.build_step(cfg, shape, shard_ctx=ctx)
+        batch_sh = arch.input_specs(cfg, shape)
+        b_specs = arch.batch_pspecs(cfg, shape, ctx)
+
+    params_in = _sds(params_sh, p_specs, mesh)
+    batch_in = _sds(batch_sh, b_specs, mesh)
+
+    if kind == "train":
+        opt_cfg = AdamWConfig(moment_dtype=arch.moment_dtype(cfg))
+        opt_sh = jax.eval_shape(lambda p: init_opt_state(p, opt_cfg), params_sh)
+        o_specs = zero1_state_specs(
+            p_specs, params_sh, opt_sh, ctx.n_data, ctx.data_axes,
+            mesh_shape=dict(mesh.shape),
+        )
+        opt_in = _sds(opt_sh, o_specs, mesh)
+        jitted = jax.jit(step, donate_argnums=(0, 1))
+        lowered = jitted.lower(params_in, opt_in, batch_in)
+    else:
+        jitted = jax.jit(step, donate_argnums=(1,) if "cache" in batch_sh else ())
+        lowered = jitted.lower(params_in, batch_in)
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    mem = _mem_dict(compiled.memory_analysis())
+    hlo = compiled.as_text()
+    coll = collective_census(hlo)
+
+    n_dev = mesh.devices.size
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+
+    result = {
+        "arch": arch_name,
+        "shape": shape,
+        "mesh": mesh_kind,
+        "variant": variant,
+        "kind": kind,
+        "n_devices": int(n_dev),
+        "ok": True,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": mem,
+        "per_device_flops": flops,
+        "per_device_bytes_accessed": bytes_acc,
+        "collectives": coll,
+        "model_flops_per_token": arch.model_flops_per_token(cfg),
+        "hlo_bytes": len(hlo),
+    }
+    # Sanity proof requested by the contract: print on stdout.
+    print(f"[{arch_name}/{shape}/{mesh_kind}] memory_analysis:")
+    for k, v in mem.items():
+        print(f"  {k}: {v/2**30:.3f} GiB")
+    print(f"[{arch_name}/{shape}/{mesh_kind}] cost_analysis: flops={flops:.3e} "
+          f"bytes={bytes_acc:.3e} collective_bytes={coll['total_bytes']:.3e}")
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out-dir", default=RESULTS_DIR)
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = [(a, s) for a, s, _ in all_cells()]
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required (or --all)")
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    suffix = "" if args.variant == "baseline" else f"__v-{args.variant}"
+    for arch_name, shape in cells:
+        for mesh_kind in meshes:
+            out_path = os.path.join(
+                args.out_dir, f"{arch_name}__{shape}__{mesh_kind}{suffix}.json"
+            )
+            if os.path.exists(out_path) and not args.force:
+                print(f"skip (cached): {out_path}")
+                continue
+            try:
+                res = run_cell(arch_name, shape, mesh_kind, variant=args.variant)
+            except Exception as e:  # noqa: BLE001 — record and continue
+                traceback.print_exc()
+                res = {
+                    "arch": arch_name, "shape": shape, "mesh": mesh_kind,
+                    "variant": args.variant,
+                    "ok": False, "error": f"{type(e).__name__}: {e}",
+                }
+                failures.append((arch_name, shape, mesh_kind))
+            with open(out_path + ".tmp", "w") as f:
+                json.dump(res, f, indent=1)
+            os.replace(out_path + ".tmp", out_path)
+    if failures:
+        print("FAILURES:", failures)
+        sys.exit(1)
+    print("all requested cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

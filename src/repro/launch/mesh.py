@@ -1,0 +1,27 @@
+"""Production mesh construction (multi-pod dry-run contract).
+
+A FUNCTION, not a module constant — importing this module must never touch
+jax device state (the dry-run sets XLA_FLAGS before any jax import; tests
+and benches run single-device).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.distributed.sharding import ShardCtx
+
+__all__ = ["make_production_mesh", "make_ctx"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_ctx(mesh) -> ShardCtx:
+    data_axes = (
+        ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    )
+    return ShardCtx(mesh=mesh, data_axes=data_axes, model_axis="model")

@@ -1,0 +1,80 @@
+"""Serving launcher: anytime IR under an SLA.
+
+``python -m repro.launch.serve [--sla-ms B] [--policy reactive] [--queries N]``
+
+Builds (or loads from .cache) a clustered index over the benchmark corpus
+and serves a query stream under the chosen §6 termination policy,
+reporting percentile latencies, SLA compliance, and RBO. This is the
+single-node engine; the sharded multi-node form is exercised by the
+anytime-ir dry-run cells and tests/test_distributed_ir.py.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.anytime import (
+    Fixed, Overshoot, Predictive, Reactive, Undershoot, run_query_anytime,
+)
+from repro.core.metrics import rbo
+from repro.core.oracle import exhaustive_topk
+from repro.core.range_daat import Engine
+
+POLICIES = {
+    "none": lambda a: None,
+    "fixed": lambda a: Fixed(10),
+    "overshoot": lambda a: Overshoot(),
+    "undershoot": lambda a: Undershoot(2.0),
+    "predictive": lambda a: Predictive(a),
+    "reactive": lambda a: Reactive(alpha=a, beta=1.2, q=0.01),
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sla-ms", type=float, default=None)
+    ap.add_argument("--policy", default="reactive", choices=sorted(POLICIES))
+    ap.add_argument("--alpha", type=float, default=1.0)
+    ap.add_argument("--queries", type=int, default=200)
+    ap.add_argument("--k", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    corpus = common.bench_corpus()
+    log = common.bench_queries(corpus, n=args.queries, seed=42)
+    index = common.bench_index(corpus, "clustered_bp")
+    engine = Engine(index, k=args.k)
+    queries = [log.terms[i] for i in range(log.n_queries)]
+    common.warmup_engine(engine, queries)
+
+    base, oracle = [], {}
+    for i, q in enumerate(queries[: min(64, len(queries))]):
+        res = run_query_anytime(engine, engine.plan(q), policy=None)
+        base.append(res.elapsed_ms)
+        oracle[i] = exhaustive_topk(index, q, args.k)[0].tolist()
+    budget = args.sla_ms or float(np.percentile(base, 99)) * 0.25
+    print(f"policy={args.policy} SLA: P99 <= {budget:.2f} ms")
+
+    policy = POLICIES[args.policy](args.alpha)
+    times, vals = [], []
+    t0 = time.perf_counter()
+    for i, q in enumerate(queries):
+        res = run_query_anytime(engine, engine.plan(q), policy=policy,
+                                budget_ms=budget)
+        times.append(res.elapsed_ms)
+        if i in oracle:
+            vals.append(rbo(res.doc_ids.tolist(), oracle[i], phi=0.8))
+    wall = time.perf_counter() - t0
+    t = np.asarray(times)
+    print(f"{len(queries)} queries in {wall:.1f}s ({len(queries)/wall:.1f} q/s)")
+    print(f"P50/P95/P99: {np.percentile(t,50):.2f} / {np.percentile(t,95):.2f} "
+          f"/ {np.percentile(t,99):.2f} ms | miss {(t>budget).mean()*100:.2f}% "
+          f"| RBO {np.mean(vals):.4f} | SLA "
+          f"{'MET' if np.percentile(t,99) <= budget else 'MISSED'}")
+
+
+if __name__ == "__main__":
+    main()

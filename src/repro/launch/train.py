@@ -1,0 +1,87 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs the full substrate — config registry, AdamW (+ moment compression),
+cosine schedule, async atomic checkpointing, preemption handling,
+deterministic resume — on the reduced config by default (this container is
+one CPU). On a real cluster the same entry point runs the full config under
+the production mesh: pass --full and launch one process per host with
+jax.distributed (the step/sharding code is identical to the dry-run's).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs.registry import ARCHS, get_arch
+from repro.train.checkpoint import Checkpointer
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--shape", default=None, help="train shape (gnn/recsys)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--moments", default="fp32", choices=["fp32", "bf16", "int8"])
+    ap.add_argument("--full", action="store_true",
+                    help="full published config (needs a real cluster)")
+    args = ap.parse_args(argv)
+
+    arch = get_arch(args.arch)
+    cfg = arch.model_config(reduced=not args.full)
+    shape = args.shape or {
+        "lm": "train_4k", "gnn": "full_graph_sm", "recsys": "train_batch",
+    }.get(arch.family)
+    if shape is None:
+        ap.error(f"{args.arch} has no train shape")
+    if arch.family == "gnn":
+        cfg = arch._resolved(cfg, shape)
+
+    params = arch.init_params(jax.random.key(0), cfg)
+    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"arch={args.arch} shape={shape} params={n/1e6:.2f}M "
+          f"({'full' if args.full else 'reduced'})")
+
+    step, kind = arch.build_step(cfg, shape)
+    assert kind == "train", f"{shape} is not a train shape"
+
+    def data_fn(s):  # deterministic in the step counter -> exact resume
+        return arch.make_batch(cfg, shape, seed=s)
+
+    ckpt = Checkpointer(args.ckpt_dir, keep_last=3) if args.ckpt_dir else None
+
+    # Drive the arch step directly (it already includes the optimizer).
+    from repro.optim.adamw import AdamWConfig, init_opt_state
+
+    opt_state = init_opt_state(params, AdamWConfig(moment_dtype=args.moments))
+    jstep = jax.jit(step, donate_argnums=(0, 1))
+    start = 0
+    if ckpt:
+        restored = ckpt.restore_latest()
+        if restored:
+            params, opt_state = restored["params"], restored["opt_state"]
+            start = int(jax.device_get(opt_state["step"]))
+            print(f"resumed from step {start}")
+    import time
+    for s in range(start, args.steps):
+        t0 = time.perf_counter()
+        params, opt_state, metrics = jstep(params, opt_state, data_fn(s))
+        loss = float(jax.device_get(metrics["loss"]))
+        if s % 20 == 0 or s == args.steps - 1:
+            print(f"step {s:5d}  loss {loss:.4f}  "
+                  f"{(time.perf_counter()-t0)*1e3:.0f} ms")
+        if ckpt and (s + 1) % args.ckpt_every == 0:
+            ckpt.save({"params": params, "opt_state": opt_state}, step=s + 1)
+    if ckpt:
+        ckpt.save({"params": params, "opt_state": opt_state},
+                  step=args.steps, blocking=True)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

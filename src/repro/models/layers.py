@@ -1,0 +1,77 @@
+"""Shared model layers: RMSNorm, RoPE, SwiGLU, initializers.
+
+Functional style: parameters are nested dicts of jnp arrays; every layer is
+a pure function. Compute dtype is configurable (bf16 for the production
+meshes); normalization statistics and softmaxes accumulate in fp32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "dense_init",
+    "rms_norm",
+    "rms_norm_init",
+    "rope_freqs",
+    "apply_rope",
+    "swiglu",
+    "swiglu_init",
+]
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.bfloat16, scale: float = 1.0):
+    std = scale / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * std).astype(dtype)
+
+
+def rms_norm_init(d: int, dtype=jnp.bfloat16):
+    return jnp.ones((d,), dtype)
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(head_dim: int, max_len: int, theta: float = 10000.0) -> jnp.ndarray:
+    """[max_len, head_dim//2] complex-free rotary angle table (fp32)."""
+    inv = 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64) / head_dim))
+    t = np.arange(max_len, dtype=np.float64)
+    ang = np.outer(t, inv)
+    return jnp.asarray(np.stack([np.cos(ang), np.sin(ang)], axis=-1), jnp.float32)
+
+
+def apply_rope(x: jnp.ndarray, rope: jnp.ndarray, positions: jnp.ndarray) -> jnp.ndarray:
+    """Rotate pairs. x: [..., seq, heads, head_dim]; positions: [..., seq]."""
+    dt = x.dtype
+    cs = rope[positions]  # [..., seq, hd//2, 2]
+    cos = cs[..., 0][..., None, :]  # [..., seq, 1, hd//2]
+    sin = cs[..., 1][..., None, :]
+    xf = x.astype(jnp.float32)
+    x1 = xf[..., 0::2]
+    x2 = xf[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x1 * sin + x2 * cos
+    out = jnp.stack([o1, o2], axis=-1).reshape(x.shape)
+    return out.astype(dt)
+
+
+def swiglu_init(key, d_model: int, d_ff: int, dtype=jnp.bfloat16):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def swiglu(params, x: jnp.ndarray) -> jnp.ndarray:
+    g = jnp.dot(x, params["w_gate"])
+    u = jnp.dot(x, params["w_up"])
+    return jnp.dot(jax.nn.silu(g) * u, params["w_down"])

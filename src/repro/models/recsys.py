@@ -1,0 +1,365 @@
+"""RecSys architectures: BST, MIND, AutoInt, BERT4Rec.
+
+Shared substrate: huge embedding tables (row-sharded over the mesh ``model``
+axis via models.embedding) feeding a small interaction network. The four
+assigned archs cover the three interaction regimes: transformer-over-
+sequence (BST, BERT4Rec), multi-interest capsule routing (MIND), and
+self-attention over field embeddings (AutoInt).
+
+Shapes contract (configs/*.py): ``train`` takes a feature dict + labels;
+``serve`` scores (user, item) pairs; ``retrieval`` scores one user against
+n_candidates items (the paper-representative anytime top-k cell — see
+serve/retrieval.py for the clustered anytime scorer).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.embedding import embedding_bag, sharded_field_lookup
+from repro.models.layers import dense_init, rms_norm_init, rms_norm
+
+__all__ = ["RecConfig", "init_rec", "rec_train_loss", "rec_serve_scores", "rec_retrieval_scores", "rec_param_specs", "rec_user_embedding"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RecConfig:
+    name: str
+    arch: str  # "bst" | "mind" | "autoint" | "bert4rec"
+    n_items: int
+    embed_dim: int
+    seq_len: int = 0
+    n_fields: int = 0
+    field_vocab: int = 100_000
+    n_blocks: int = 1
+    n_heads: int = 8
+    mlp: tuple = (1024, 512, 256)
+    n_interests: int = 4
+    capsule_iters: int = 3
+    n_attn_layers: int = 3
+    d_attn: int = 32
+    dtype: Any = jnp.float32
+    loss_chunk: int = 2048
+
+
+# ------------------------------------------------------------ small blocks
+
+
+def _init_block(key, d: int, n_heads: int, dtype):
+    ks = jax.random.split(key, 7)
+    return {
+        "ln1": rms_norm_init(d, dtype),
+        "wq": dense_init(ks[0], d, d, dtype),
+        "wk": dense_init(ks[1], d, d, dtype),
+        "wv": dense_init(ks[2], d, d, dtype),
+        "wo": dense_init(ks[3], d, d, dtype),
+        "ln2": rms_norm_init(d, dtype),
+        "w1": dense_init(ks[4], d, 4 * d, dtype),
+        "w2": dense_init(ks[5], 4 * d, d, dtype),
+    }
+
+
+def _block(p, x, n_heads: int, causal: bool = False):
+    """Small pre-LN transformer block; x [B, S, d]; full attention."""
+    B, S, d = x.shape
+    hd = d // n_heads
+    z = rms_norm(x, p["ln1"])
+    q = jnp.dot(z, p["wq"]).reshape(B, S, n_heads, hd)
+    k = jnp.dot(z, p["wk"]).reshape(B, S, n_heads, hd)
+    v = jnp.dot(z, p["wv"]).reshape(B, S, n_heads, hd)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32)
+    s = s / jnp.sqrt(jnp.float32(hd))
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhqk,bkhd->bqhd", w, v).reshape(B, S, d)
+    x = x + jnp.dot(o, p["wo"])
+    z = rms_norm(x, p["ln2"])
+    return x + jnp.dot(jax.nn.gelu(jnp.dot(z, p["w1"])), p["w2"])
+
+
+def _init_mlp(key, dims, dtype):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [
+        {"w": dense_init(ks[i], dims[i], dims[i + 1], dtype), "b": jnp.zeros((dims[i + 1],), dtype)}
+        for i in range(len(dims) - 1)
+    ]
+
+
+def _mlp(layers, x, final_act=False):
+    for i, l in enumerate(layers):
+        x = jnp.dot(x, l["w"]) + l["b"]
+        if i < len(layers) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+# -------------------------------------------------------------------- init
+
+
+def init_rec(key, cfg: RecConfig):
+    ks = jax.random.split(key, 10)
+    dt = cfg.dtype
+    D = cfg.embed_dim
+    p: dict = {"item_emb": dense_init(ks[0], cfg.n_items, D, dt, scale=1.0)}
+    if cfg.seq_len:
+        p["pos_emb"] = dense_init(ks[1], cfg.seq_len + 1, D, dt, scale=0.2)
+    if cfg.n_fields:
+        p["field_emb"] = dense_init(
+            ks[2], cfg.n_fields * cfg.field_vocab, D, dt, scale=1.0
+        )
+
+    if cfg.arch == "bst":
+        p["blocks"] = [
+            _init_block(k, D, cfg.n_heads, dt)
+            for k in jax.random.split(ks[3], cfg.n_blocks)
+        ]
+        d_cat = D * 2 + cfg.n_fields * D  # pooled seq + target + fields
+        p["mlp"] = _init_mlp(ks[4], (d_cat, *cfg.mlp, 1), dt)
+    elif cfg.arch == "mind":
+        p["caps_bilinear"] = dense_init(ks[3], D, D, dt)
+    elif cfg.arch == "autoint":
+        p["attn"] = []
+        for k in jax.random.split(ks[3], cfg.n_attn_layers):
+            k1, k2, k3, k4 = jax.random.split(k, 4)
+            p["attn"].append(
+                {
+                    "wq": dense_init(k1, D, cfg.d_attn * 2, dt),
+                    "wk": dense_init(k2, D, cfg.d_attn * 2, dt),
+                    "wv": dense_init(k3, D, cfg.d_attn * 2, dt),
+                    "wr": dense_init(k4, D, cfg.d_attn * 2, dt),
+                }
+            )
+            D = cfg.d_attn * 2  # output width after first layer
+        p["out"] = _init_mlp(ks[4], (cfg.n_fields * D, 1), dt)
+    elif cfg.arch == "bert4rec":
+        p["blocks"] = [
+            _init_block(k, D, cfg.n_heads, dt)
+            for k in jax.random.split(ks[3], cfg.n_blocks)
+        ]
+        p["final_norm"] = rms_norm_init(D, dt)
+        p["mask_emb"] = dense_init(ks[5], 1, D, dt, scale=0.2)
+    else:
+        raise ValueError(cfg.arch)
+    return p
+
+
+# ------------------------------------------------------------ user encoders
+
+
+def _lookup_fields(p, fields, cfg: RecConfig, shard_ctx):
+    """fields [B, F] per-field ids -> [B, F, D]; rows offset per field."""
+    offs = jnp.arange(cfg.n_fields, dtype=fields.dtype) * cfg.field_vocab
+    gids = fields + offs[None, :]
+    return sharded_field_lookup(p["field_emb"], gids, shard_ctx)
+
+
+def _bst_seq(p, history, target, cfg: RecConfig):
+    """history [B, S] (-1 pad), target [B] -> (pooled_seq [B, D], tgt [B, D])."""
+    B, S = history.shape
+    mask = (history >= 0).astype(p["item_emb"].dtype)
+    seq = p["item_emb"][jnp.clip(history, 0)] * mask[..., None]
+    tgt = p["item_emb"][jnp.clip(target, 0)]
+    x = jnp.concatenate([seq, tgt[:, None, :]], axis=1)  # target joins the seq
+    x = x + p["pos_emb"][None, : S + 1]
+    for blk in p["blocks"]:
+        x = _block(blk, x, cfg.n_heads)
+    mask = jnp.concatenate(
+        [history >= 0, jnp.ones((B, 1), bool)], axis=1
+    ).astype(x.dtype)
+    pooled = (x * mask[..., None]).sum(1) / jnp.maximum(mask.sum(1), 1.0)[:, None]
+    return pooled, tgt
+
+
+def _squash(v, axis=-1):
+    n2 = jnp.sum(v * v, axis=axis, keepdims=True)
+    return (n2 / (1.0 + n2)) * v / jnp.sqrt(n2 + 1e-9)
+
+
+def _mind_interests(p, history, cfg: RecConfig):
+    """Capsule (B2I dynamic routing) multi-interest extraction [B, J, D]."""
+    B, S = history.shape
+    mask = (history >= 0).astype(cfg.dtype)
+    e = p["item_emb"][jnp.clip(history, 0)] * mask[..., None]  # [B, S, D]
+    eh = jnp.dot(e, p["caps_bilinear"])  # [B, S, D]
+    # Fixed (non-trainable, deterministic) logit init as in MIND.
+    b = jnp.zeros((B, S, cfg.n_interests), cfg.dtype)
+    u = None
+    for _ in range(cfg.capsule_iters):
+        w = jax.nn.softmax(b, axis=-1) * mask[..., None]
+        s = jnp.einsum("bsj,bsd->bjd", w, eh)
+        u = _squash(s)
+        b = b + jnp.einsum("bjd,bsd->bsj", u, eh)
+    return u  # [B, J, D]
+
+
+def _autoint_fields(p, emb, cfg: RecConfig):
+    """emb [B, F, D] -> [B, F * d_out] via stacked interacting layers."""
+    x = emb
+    for layer in p["attn"]:
+        q = jnp.dot(x, layer["wq"])
+        k = jnp.dot(x, layer["wk"])
+        v = jnp.dot(x, layer["wv"])
+        H = 2  # two heads, d_attn each
+        B, F, DD = q.shape
+        hd = DD // H
+        qh = q.reshape(B, F, H, hd)
+        kh = k.reshape(B, F, H, hd)
+        vh = v.reshape(B, F, H, hd)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qh, kh, preferred_element_type=jnp.float32)
+        w = jax.nn.softmax(s / jnp.sqrt(jnp.float32(hd)), axis=-1).astype(x.dtype)
+        o = jnp.einsum("bhqk,bkhd->bqhd", w, vh).reshape(B, F, DD)
+        x = jax.nn.relu(o + jnp.dot(x, layer["wr"]))
+    return x.reshape(x.shape[0], -1)
+
+
+def _bert4rec_hidden(p, history, cfg: RecConfig, mask_positions=None):
+    """history [B, S]; optional masked positions replaced by [MASK] emb."""
+    B, S = history.shape
+    x = p["item_emb"][jnp.clip(history, 0)]
+    if mask_positions is not None:
+        m = jax.nn.one_hot(mask_positions, S, dtype=x.dtype)  # [B, M, S]
+        is_masked = m.sum(1) > 0  # [B, S]
+        x = jnp.where(is_masked[..., None], p["mask_emb"][0][None, None], x)
+    x = x + p["pos_emb"][None, :S]
+    for blk in p["blocks"]:
+        x = _block(blk, x, cfg.n_heads)
+    return rms_norm(x, p["final_norm"])
+
+
+def rec_user_embedding(p, feats: dict, cfg: RecConfig):
+    """User-side representation for retrieval (arch-dependent)."""
+    if cfg.arch == "mind":
+        return _mind_interests(p, feats["history"], cfg)  # [B, J, D]
+    if cfg.arch == "bert4rec":
+        h = _bert4rec_hidden(p, feats["history"], cfg)
+        return h[:, -1:, :]  # [B, 1, D] last position
+    raise ValueError(f"{cfg.arch} has no dot-product user embedding")
+
+
+# ------------------------------------------------------------ score / loss
+
+
+def rec_serve_scores(p, feats: dict, cfg: RecConfig, shard_ctx=None):
+    """Pointwise scores for a batch of (user, item) examples -> [B]."""
+    if cfg.arch == "bst":
+        pooled, tgt = _bst_seq(p, feats["history"], feats["target"], cfg)
+        fe = _lookup_fields(p, feats["fields"], cfg, shard_ctx)
+        z = jnp.concatenate([pooled, tgt, fe.reshape(fe.shape[0], -1)], axis=-1)
+        return _mlp(p["mlp"], z)[:, 0]
+    if cfg.arch == "mind":
+        u = _mind_interests(p, feats["history"], cfg)  # [B, J, D]
+        t = p["item_emb"][jnp.clip(feats["target"], 0)]  # [B, D]
+        return jnp.max(jnp.einsum("bjd,bd->bj", u, t), axis=-1)
+    if cfg.arch == "autoint":
+        emb = _lookup_fields(p, feats["fields"], cfg, shard_ctx)
+        return _mlp(p["out"], _autoint_fields(p, emb, cfg))[:, 0]
+    if cfg.arch == "bert4rec":
+        h = _bert4rec_hidden(p, feats["history"], cfg)[:, -1]  # [B, D]
+        t = p["item_emb"][jnp.clip(feats["target"], 0)]
+        return jnp.sum(h * t, axis=-1)
+    raise ValueError(cfg.arch)
+
+
+def _bce(logits, labels):
+    z = logits.astype(jnp.float32)
+    y = labels.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+
+def rec_train_loss(p, batch: dict, cfg: RecConfig, shard_ctx=None):
+    if cfg.arch in ("bst", "autoint"):
+        return _bce(rec_serve_scores(p, batch, cfg, shard_ctx), batch["label"])
+    if cfg.arch == "mind":
+        u = _mind_interests(p, batch["history"], cfg)  # [B, J, D]
+        t = p["item_emb"][jnp.clip(batch["target"], 0)]  # [B, D]
+        # Label-aware attention -> in-batch sampled softmax.
+        ui = jnp.einsum("bjd,bd->bj", u, t)
+        att = jax.nn.softmax(ui * 2.0, axis=-1)
+        user = jnp.einsum("bj,bjd->bd", att, u)
+        logits = jnp.dot(user, t.T).astype(jnp.float32)  # [B, B] in-batch
+        labels = jnp.arange(logits.shape[0])
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+        return jnp.mean(lse - gold)
+    if cfg.arch == "bert4rec":
+        h = _bert4rec_hidden(p, batch["history"], cfg, batch["mask_positions"])
+        B, M = batch["mask_positions"].shape
+        hm = jnp.take_along_axis(
+            h, batch["mask_positions"][..., None], axis=1
+        )  # [B, M, D]
+        flat = hm.reshape(B * M, cfg.embed_dim)
+        labels = batch["mask_labels"].reshape(B * M)
+        # Sampled softmax over a shared negative set (BERT4Rec-style):
+        # full-vocab CE at batch 65536 x 20 masks x 1M items materializes
+        # a [1.3M, 1M] logits block — 4096 shared negatives + the gold
+        # column approximate it at 1/256 the traffic.
+        n_neg = min(4096, cfg.n_items)
+        # Deterministic strided negatives (jit-stable; per-step PRNG keys
+        # would work equally — negatives just need vocab coverage).
+        neg_ids = jnp.arange(n_neg) * (cfg.n_items // n_neg)
+        neg_emb = p["item_emb"][neg_ids]  # [n_neg, D]
+        gold_emb = p["item_emb"][jnp.clip(labels, 0)]  # [BM, D]
+        neg_logits = jnp.dot(
+            flat, neg_emb.T, preferred_element_type=jnp.float32
+        )  # [BM, n_neg]
+        gold_logit = jnp.sum(
+            flat.astype(jnp.float32) * gold_emb.astype(jnp.float32), axis=-1
+        )
+        lse = jax.nn.logsumexp(
+            jnp.concatenate([neg_logits, gold_logit[:, None]], axis=1), axis=-1
+        )
+        return jnp.mean(lse - gold_logit)
+    raise ValueError(cfg.arch)
+
+
+def rec_retrieval_scores(p, feats: dict, candidates: jnp.ndarray, cfg: RecConfig, shard_ctx=None):
+    """Score ONE user against [C] candidate items -> [C].
+
+    MIND/BERT4Rec: dot-product retrieval (user embedding vs item embeddings)
+    — the shape served by the anytime clustered scorer (serve/retrieval.py).
+    BST/AutoInt: the full ranking tower vectorized over candidates
+    (offline bulk-scoring semantics).
+    """
+    C = candidates.shape[0]
+    if cfg.arch in ("mind", "bert4rec"):
+        u = rec_user_embedding(p, feats, cfg)[0]  # [J, D]
+        t = p["item_emb"][jnp.clip(candidates, 0)]  # [C, D]
+        return jnp.max(jnp.einsum("jd,cd->cj", u, t), axis=-1)
+    if cfg.arch == "bst":
+        pooled, _ = _bst_seq(
+            p, feats["history"], jnp.zeros((1,), jnp.int32), cfg
+        )  # [1, D] user side, target slot zeroed
+        fe = _lookup_fields(p, feats["fields"], cfg, shard_ctx).reshape(1, -1)
+        t = p["item_emb"][jnp.clip(candidates, 0)]  # [C, D]
+        z = jnp.concatenate(
+            [
+                jnp.broadcast_to(pooled, (C, pooled.shape[-1])),
+                t,
+                jnp.broadcast_to(fe, (C, fe.shape[-1])),
+            ],
+            axis=-1,
+        )
+        return _mlp(p["mlp"], z)[:, 0]
+    if cfg.arch == "autoint":
+        # Candidate item takes the last field slot; user fields broadcast.
+        f = jnp.broadcast_to(feats["fields"], (C, cfg.n_fields)).copy()
+        f = f.at[:, -1].set(candidates % cfg.field_vocab)
+        emb = _lookup_fields(p, f, cfg, shard_ctx)
+        return _mlp(p["out"], _autoint_fields(p, emb, cfg))[:, 0]
+    raise ValueError(cfg.arch)
+
+
+def rec_param_specs(p_example, cfg: RecConfig, model_axis: str = "model"):
+    """Embedding tables row-sharded over model; small nets replicated."""
+    specs = jax.tree.map(lambda _: P(), p_example)
+    specs["item_emb"] = P(model_axis, None)
+    if "field_emb" in specs:
+        specs["field_emb"] = P(model_axis, None)
+    return specs

@@ -1,0 +1,538 @@
+"""Decoder-only transformer supporting all five assigned LM architectures.
+
+  * GQA (qwen3 qk-norm, qwen2.5 QKV-bias, deepseek-67b llama-style) or MLA
+    (deepseek-v3) attention;
+  * dense SwiGLU FFN, optionally switching to MoE after n_dense_layers
+    (deepseek-v3: 3 dense + 58 MoE; moonshot: 1 dense + 47 MoE);
+  * optional MTP (multi-token prediction) auxiliary head (deepseek-v3);
+  * layers stacked for lax.scan (small HLO, fast 512-device compiles) with a
+    configurable remat policy;
+  * chunked cross-entropy — logits never materialize beyond
+    [chunk, vocab] (17 GB/device otherwise at train_4k on deepseek-v3);
+  * decode path with per-layer KV caches (GQA) or compressed caches (MLA).
+
+Parameter sharding specs are co-located here (param_specs) so the dry-run,
+trainer, and checkpointing all derive layouts from one source of truth.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.attention import (
+    GQAConfig,
+    MLAConfig,
+    gqa,
+    init_gqa,
+    init_mla,
+    mla,
+)
+from repro.models.layers import (
+    dense_init,
+    rms_norm,
+    rms_norm_init,
+    rope_freqs,
+    swiglu,
+    swiglu_init,
+)
+from repro.models.moe import MoEConfig, init_moe, moe_ffn
+
+__all__ = ["LMConfig", "init_lm", "lm_forward", "lm_loss", "init_cache", "lm_decode_step", "param_specs", "count_params"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    vocab: int
+    attn: Any  # GQAConfig | MLAConfig
+    d_ff: int  # dense-FFN hidden width
+    moe: Optional[MoEConfig] = None
+    n_dense_layers: int = 0  # leading dense layers when moe is set
+    max_seq: int = 4096
+    dtype: Any = jnp.bfloat16
+    mtp: bool = False
+    mtp_weight: float = 0.3
+    attn_chunk: int = 512
+    remat: bool = True
+    loss_chunk: int = 1024
+
+    @property
+    def n_moe_layers(self) -> int:
+        return (self.n_layers - self.n_dense_layers) if self.moe else 0
+
+    @property
+    def n_dense_total(self) -> int:
+        return self.n_layers - self.n_moe_layers
+
+
+def _is_mla(cfg: LMConfig) -> bool:
+    return isinstance(cfg.attn, MLAConfig)
+
+
+def _init_attn(key, cfg: LMConfig):
+    return init_mla(key, cfg.attn, cfg.dtype) if _is_mla(cfg) else init_gqa(
+        key, cfg.attn, cfg.dtype
+    )
+
+
+def _attn(params, x, rope, cfg: LMConfig, **kw):
+    fn = mla if _is_mla(cfg) else gqa
+    return fn(params, x, rope, cfg.attn, chunk=cfg.attn_chunk, **kw)
+
+
+def _init_layer(key, cfg: LMConfig, use_moe: bool):
+    k1, k2 = jax.random.split(key)
+    layer = {
+        "ln1": rms_norm_init(cfg.d_model, cfg.dtype),
+        "attn": _init_attn(k1, cfg),
+        "ln2": rms_norm_init(cfg.d_model, cfg.dtype),
+    }
+    if use_moe:
+        layer["moe"] = init_moe(k2, cfg.d_model, cfg.moe, cfg.dtype)
+    else:
+        layer["ffn"] = swiglu_init(k2, cfg.d_model, cfg.d_ff, cfg.dtype)
+    return layer
+
+
+def init_lm(key, cfg: LMConfig):
+    kd, km, ke, kh, kt = jax.random.split(key, 5)
+    params = {
+        "embed": dense_init(ke, cfg.vocab, cfg.d_model, cfg.dtype, scale=1.0),
+        "final_norm": rms_norm_init(cfg.d_model, cfg.dtype),
+        "lm_head": dense_init(kh, cfg.d_model, cfg.vocab, cfg.dtype),
+    }
+    nd, nm = cfg.n_dense_total, cfg.n_moe_layers
+    if nd:
+        params["dense"] = jax.vmap(lambda k: _init_layer(k, cfg, False))(
+            jax.random.split(kd, nd)
+        )
+    if nm:
+        params["moe"] = jax.vmap(lambda k: _init_layer(k, cfg, True))(
+            jax.random.split(km, nm)
+        )
+    if cfg.mtp:
+        k1, k2, k3 = jax.random.split(kt, 3)
+        params["mtp"] = {
+            "proj": dense_init(k1, 2 * cfg.d_model, cfg.d_model, cfg.dtype),
+            "ln_h": rms_norm_init(cfg.d_model, cfg.dtype),
+            "ln_e": rms_norm_init(cfg.d_model, cfg.dtype),
+            "block": _init_layer(k3, cfg, False),
+            "final_norm": rms_norm_init(cfg.d_model, cfg.dtype),
+        }
+        del k2
+    return params
+
+
+# ------------------------------------------------------------------ forward
+
+
+def _layer_apply(layer, x, rope, cfg: LMConfig, positions, use_moe, shard_ctx):
+    h, _ = _attn(layer["attn"], rms_norm(x, layer["ln1"]), rope, cfg, positions=positions)
+    x = x + h
+    z = rms_norm(x, layer["ln2"])
+    if use_moe:
+        B, S, d = z.shape
+        y, aux = moe_ffn(layer["moe"], z.reshape(B * S, d), cfg.moe, shard_ctx)
+        return x + y.reshape(B, S, d), aux
+    return x + swiglu(layer["ffn"], z), jnp.zeros((), jnp.float32)
+
+
+def _scan_segment(params_seg, x, rope, cfg, positions, use_moe, shard_ctx):
+    def body(carry, layer):
+        x, aux = carry
+        x, a = _layer_apply(layer, x, rope, cfg, positions, use_moe, shard_ctx)
+        return (x, aux + a), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), params_seg)
+    return x, aux
+
+
+def lm_forward(params, tokens: jnp.ndarray, cfg: LMConfig, shard_ctx=None):
+    """tokens [B, S] -> (hidden [B, S, d], aux_loss). Logits are computed by
+    the loss (chunked) or by the caller via lm_head."""
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    rope = rope_freqs(
+        cfg.attn.qk_rope_head_dim if _is_mla(cfg) else cfg.attn.head_dim,
+        max(S, cfg.max_seq),
+        cfg.attn.rope_theta,
+    )
+    positions = jnp.arange(S)
+    aux = jnp.zeros((), jnp.float32)
+    if "dense" in params:
+        x, a = _scan_segment(params["dense"], x, rope, cfg, positions, False, shard_ctx)
+        aux += a
+    if "moe" in params:
+        x, a = _scan_segment(params["moe"], x, rope, cfg, positions, True, shard_ctx)
+        aux += a
+    return rms_norm(x, params["final_norm"]), aux
+
+
+def _chunked_xent(h2d, head, labels, chunk: int):
+    """Mean CE over T tokens without materializing [T, V] logits."""
+    T, d = h2d.shape
+    if T % chunk != 0:
+        chunk = T
+    nc = T // chunk
+    hr = h2d.reshape(nc, chunk, d)
+    lr = labels.reshape(nc, chunk)
+
+    def body(tot, xs):
+        hc, lc = xs
+        logits = jnp.dot(hc, head, preferred_element_type=jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[:, None], axis=-1)[:, 0]
+        return tot + jnp.sum(lse - gold), None
+
+    tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hr, lr))
+    return tot / T
+
+
+def lm_loss(params, tokens: jnp.ndarray, cfg: LMConfig, shard_ctx=None):
+    """Next-token CE (+ MoE aux + MTP aux). tokens [B, S] int32."""
+    B, S = tokens.shape
+    h, aux = lm_forward(params, tokens, cfg, shard_ctx)
+    h_pred = h[:, :-1].reshape(B * (S - 1), cfg.d_model)
+    labels = tokens[:, 1:].reshape(B * (S - 1))
+    loss = _chunked_xent(h_pred, params["lm_head"], labels, cfg.loss_chunk)
+
+    if cfg.mtp and "mtp" in params:
+        # Predict token t+2 from (h_t, embed(token_{t+1})) through one block.
+        m = params["mtp"]
+        h_in = rms_norm(h[:, :-1], m["ln_h"])
+        e_in = rms_norm(params["embed"][tokens[:, 1:]], m["ln_e"])
+        z = jnp.dot(jnp.concatenate([h_in, e_in], -1), m["proj"])
+        rope = rope_freqs(
+            cfg.attn.qk_rope_head_dim if _is_mla(cfg) else cfg.attn.head_dim,
+            max(S, cfg.max_seq),
+            cfg.attn.rope_theta,
+        )
+        z, _ = _layer_apply(
+            m["block"], z, rope, cfg, jnp.arange(S - 1), False, shard_ctx
+        )
+        z = rms_norm(z, m["final_norm"])
+        z_pred = z[:, :-1].reshape(B * (S - 2), cfg.d_model)
+        mtp_labels = tokens[:, 2:].reshape(B * (S - 2))
+        loss = loss + cfg.mtp_weight * _chunked_xent(
+            z_pred, params["lm_head"], mtp_labels, cfg.loss_chunk
+        )
+
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.aux_loss_weight * aux
+    return loss
+
+
+# ------------------------------------------------------------------- decode
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=None):
+    """Stacked per-segment KV caches (ShapeDtypeStruct-compatible)."""
+    dtype = dtype or cfg.dtype
+    out = {}
+
+    def one(n_layers):
+        if _is_mla(cfg):
+            a = cfg.attn
+            return {
+                "c_kv": jnp.zeros((n_layers, batch, max_len, a.kv_lora_rank), dtype),
+                "k_rope": jnp.zeros(
+                    (n_layers, batch, max_len, a.qk_rope_head_dim), dtype
+                ),
+            }
+        a = cfg.attn
+        return {
+            "k": jnp.zeros((n_layers, batch, max_len, a.n_kv_heads, a.head_dim), dtype),
+            "v": jnp.zeros((n_layers, batch, max_len, a.n_kv_heads, a.head_dim), dtype),
+        }
+
+    if cfg.n_dense_total:
+        out["dense"] = one(cfg.n_dense_total)
+    if cfg.n_moe_layers:
+        out["moe"] = one(cfg.n_moe_layers)
+    return out
+
+
+def _decode_segment(params_seg, cache_seg, x, rope, cfg, pos, use_moe, shard_ctx,
+                    decode_impl: str = "batch"):
+    from repro.models.attention import (
+        gqa_decode_splitkv,
+        gqa_prefill_splitkv,
+        mla_decode_splitkv,
+    )
+    from repro.models.moe import moe_ffn_decode_ep_all
+
+    def body(x, inp):
+        layer, cache_layer = inp
+        z1 = rms_norm(x, layer["ln1"])
+        S_new = x.shape[1]
+        if decode_impl == "split_kv" and shard_ctx is not None and (
+            S_new == 1 or not _is_mla(cfg)
+        ):
+            if S_new == 1:
+                fn = mla_decode_splitkv if _is_mla(cfg) else gqa_decode_splitkv
+                h, new_cache = fn(
+                    layer["attn"], z1, rope, cfg.attn, cache_layer, pos,
+                    shard_ctx,
+                )
+            else:
+                # Seq-parallel prefill chunk (chunk size == per-rank slice).
+                h, new_cache = gqa_prefill_splitkv(
+                    layer["attn"], z1, rope, cfg.attn, cache_layer,
+                    pos // S_new, shard_ctx,
+                )
+        else:
+            h, new_cache = _attn(
+                layer["attn"], z1, rope, cfg,
+                positions=pos + jnp.arange(x.shape[1]),
+                cache=cache_layer, cache_pos=pos,
+            )
+        x = x + h
+        z = rms_norm(x, layer["ln2"])
+        if use_moe:
+            B, S, d = z.shape
+            if decode_impl == "split_kv" and shard_ctx is not None:
+                y, _ = moe_ffn_decode_ep_all(
+                    layer["moe"], z.reshape(B * S, d), cfg.moe, shard_ctx
+                )
+            else:
+                y, _ = moe_ffn(layer["moe"], z.reshape(B * S, d), cfg.moe, shard_ctx)
+            x = x + y.reshape(B, S, d)
+        else:
+            x = x + swiglu(layer["ffn"], z)
+        return x, new_cache
+
+    x, new_cache = jax.lax.scan(body, x, (params_seg, cache_seg))
+    return x, new_cache
+
+
+def lm_decode_step(
+    params, tokens, cache, pos, cfg: LMConfig, shard_ctx=None,
+    logits_last_only: bool = False, decode_impl: str = "batch",
+):
+    """One decode (or prefill) step. tokens [B, S_new]; pos = cache fill.
+
+    decode_impl: "batch" (cache sharded over batch — baseline) or
+    "split_kv" (cache sharded batch x seq with partial-softmax merge +
+    absorbed MLA + full-grid MoE EP — the §Perf decode variant).
+    Returns (logits [B, S_new, V] — or [B, 1, V] with logits_last_only, the
+    prefill contract — and the updated cache).
+    """
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    rope = rope_freqs(
+        cfg.attn.qk_rope_head_dim if _is_mla(cfg) else cfg.attn.head_dim,
+        cfg.max_seq,
+        cfg.attn.rope_theta,
+    )
+    new_cache = {}
+    if "dense" in params:
+        x, new_cache["dense"] = _decode_segment(
+            params["dense"], cache["dense"], x, rope, cfg, pos, False, shard_ctx,
+            decode_impl,
+        )
+    if "moe" in params:
+        x, new_cache["moe"] = _decode_segment(
+            params["moe"], cache["moe"], x, rope, cfg, pos, True, shard_ctx,
+            decode_impl,
+        )
+    h = rms_norm(x, params["final_norm"])
+    if logits_last_only:
+        h = h[:, -1:]
+    logits = jnp.dot(h, params["lm_head"], preferred_element_type=jnp.float32)
+    return logits, new_cache
+
+
+# ------------------------------------------------------------------- specs
+
+
+def _attn_specs(cfg: LMConfig, m: str):
+    if _is_mla(cfg):
+        return {
+            "w_dq": P(),
+            "q_norm": P(),
+            "w_uq": P(None, m),
+            "w_dkv": P(),
+            "kv_norm": P(),
+            "w_uk": P(None, m),
+            "w_uv": P(None, m),
+            "wo": P(m, None),
+        }
+    a = cfg.attn
+    kv_shardable = a.n_kv_heads * a.head_dim % 16 == 0 and a.n_kv_heads >= 16
+    kv = P(None, m) if kv_shardable else P()
+    s = {
+        "wq": P(None, m),
+        "wk": kv,
+        "wv": kv,
+        "wo": P(m, None),
+    }
+    if a.qkv_bias:
+        s["bq"] = P(m)
+        s["bk"] = P(m) if kv_shardable else P()
+        s["bv"] = P(m) if kv_shardable else P()
+    if a.qk_norm:
+        s["q_norm"] = P()
+        s["k_norm"] = P()
+    return s
+
+
+def _layer_specs(cfg: LMConfig, use_moe: bool, m: str):
+    def stack(spec: P) -> P:
+        return P(None, *spec)  # leading layer-stack dim
+
+    attn = jax.tree.map(
+        stack, _attn_specs(cfg, m), is_leaf=lambda x: isinstance(x, P)
+    )
+    layer = {"ln1": P(None), "attn": attn, "ln2": P(None)}
+    if use_moe:
+        moe = {
+            "router": P(None),
+            "w_gate": P(None, m, None, None),
+            "w_up": P(None, m, None, None),
+            "w_down": P(None, m, None, None),
+        }
+        if cfg.moe.n_shared:
+            moe["shared"] = {
+                "w_gate": P(None, None, m),
+                "w_up": P(None, None, m),
+                "w_down": P(None, m, None),
+            }
+        layer["moe"] = moe
+    else:
+        layer["ffn"] = {
+            "w_gate": P(None, None, m),
+            "w_up": P(None, None, m),
+            "w_down": P(None, m, None),
+        }
+    return layer
+
+
+def param_specs(cfg: LMConfig, model_axis: str = "model"):
+    """PartitionSpec pytree matching init_lm's structure (TP over model)."""
+    m = model_axis
+    specs = {
+        "embed": P(None, None),
+        "final_norm": P(None),
+        "lm_head": P(None, m),  # vocab-sharded output projection
+    }
+    if cfg.n_dense_total:
+        specs["dense"] = _layer_specs(cfg, False, m)
+    if cfg.n_moe_layers:
+        specs["moe"] = _layer_specs(cfg, True, m)
+    if cfg.mtp:
+        block = _layer_specs(cfg, False, m)
+        block = jax.tree.map(
+            lambda s: P(*s[1:]), block, is_leaf=lambda x: isinstance(x, P)
+        )  # un-stack (single layer)
+        specs["mtp"] = {
+            "proj": P(),
+            "ln_h": P(None),
+            "ln_e": P(None),
+            "block": block,
+            "final_norm": P(None),
+        }
+    return specs
+
+
+def cache_specs(cfg: LMConfig, data_axes, layout: str = "batch") -> dict:
+    """KV cache shardings. layout="batch": batch-only (baseline);
+    layout="split": batch over data x sequence over model (split-KV)."""
+    seq = "model" if layout == "split" else None
+    if _is_mla(cfg):
+        seg = {
+            "c_kv": P(None, data_axes, seq, None),
+            "k_rope": P(None, data_axes, seq, None),
+        }
+    else:
+        seg = {
+            "k": P(None, data_axes, seq, None, None),
+            "v": P(None, data_axes, seq, None, None),
+        }
+    out = {}
+    if cfg.n_dense_total:
+        out["dense"] = seg
+    if cfg.n_moe_layers:
+        out["moe"] = seg
+    return out
+
+
+def param_specs_splitkv(cfg: LMConfig, model_axis: str = "model",
+                        ep_grid_ok: bool = True):
+    """Param shardings for the split-KV decode variant (§Perf cell A).
+
+    Attention projections are row-sharded on d_model (matching the
+    shard_map in gqa/mla_decode_splitkv); MLA w_uk/w_uv replicated
+    (absorbed-path operands); MoE experts sharded over the full
+    (data, model) grid when divisible; everything else as in training.
+    """
+    m = model_axis
+    specs = param_specs(cfg, m)
+
+    def attn_split():
+        if _is_mla(cfg):
+            return {
+                "w_dq": P(None, m, None), "q_norm": P(None),
+                "w_uq": P(None, m, None), "w_dkv": P(None, m, None),
+                "kv_norm": P(None), "w_uk": P(None), "w_uv": P(None),
+                "wo": P(None, m, None),
+            }
+        a = cfg.attn
+        s = {
+            "wq": P(None, m, None), "wk": P(None, m, None),
+            "wv": P(None, m, None), "wo": P(None, m, None),
+        }
+        if a.qkv_bias:
+            s.update({"bq": P(None), "bk": P(None), "bv": P(None)})
+        if a.qk_norm:
+            s.update({"q_norm": P(None), "k_norm": P(None)})
+        return s
+
+    for seg in ("dense", "moe"):
+        if seg in specs:
+            specs[seg]["attn"] = attn_split()
+    if "moe" in specs and cfg.moe is not None and ep_grid_ok:
+        # Full-grid EP when experts cover data x model (deepseek-v3: 256/256).
+        specs["moe"]["moe"]["w_gate"] = P(None, ("data", m), None, None)
+        specs["moe"]["moe"]["w_up"] = P(None, ("data", m), None, None)
+        specs["moe"]["moe"]["w_down"] = P(None, ("data", m), None, None)
+    return specs
+
+
+def count_params(cfg: LMConfig) -> tuple[int, int]:
+    """(total, active-per-token) parameter counts — for MODEL_FLOPS."""
+    a = cfg.attn
+    if _is_mla(cfg):
+        qk_head = a.qk_nope_head_dim + a.qk_rope_head_dim
+        attn = (
+            cfg.d_model * a.q_lora_rank
+            + a.q_lora_rank * a.n_heads * qk_head
+            + cfg.d_model * (a.kv_lora_rank + a.qk_rope_head_dim)
+            + a.kv_lora_rank * a.n_heads * (a.qk_nope_head_dim + a.v_head_dim)
+            + a.n_heads * a.v_head_dim * cfg.d_model
+        )
+    else:
+        attn = cfg.d_model * a.head_dim * (a.n_heads * 2 + a.n_kv_heads * 2)
+    dense_ffn = 3 * cfg.d_model * cfg.d_ff
+    embed = 2 * cfg.vocab * cfg.d_model
+    total = embed + cfg.n_dense_total * (attn + dense_ffn)
+    active = embed + cfg.n_dense_total * (attn + dense_ffn)
+    if cfg.moe:
+        moe_ffn_p = 3 * cfg.d_model * cfg.moe.d_ff
+        shared = cfg.moe.n_shared * moe_ffn_p
+        router = cfg.d_model * cfg.moe.n_experts
+        total += cfg.n_moe_layers * (
+            attn + moe_ffn_p * cfg.moe.n_experts + shared + router
+        )
+        active += cfg.n_moe_layers * (
+            attn + moe_ffn_p * cfg.moe.top_k + shared + router
+        )
+    return int(total), int(active)

@@ -1,0 +1,118 @@
+"""AdamW with sharded (ZeRO-1) and optionally 8-bit-quantized moments.
+
+Why this is first-class and not a toy (DESIGN.md §5): deepseek-v3-671b on
+512 v5e chips has 8 TB of HBM total; fp32 Adam moments + fp32 master params
+need 9.4 TB and do not fit. bf16 params + int8 moments ≈ 2.7 TB do.
+
+Int8 moments use block-wise absmax scaling along the last axis (block 256,
+the 8-bit-Adam construction) and *preserve leading dimensions*:
+p [..., D] -> q [..., D/256, 256] + scale [..., D/256, 1]. That layout lets
+moment shardings inherit the param PartitionSpec and additionally take a
+ZeRO-1 data-axis shard on the first free dimension (train/trainer.py).
+
+States are plain pytrees; shardings are applied by the caller.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "init_opt_state", "adamw_update", "is_q8_leaf"]
+
+_BLOCK = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "fp32"  # "fp32" | "bf16" | "int8"
+
+
+def is_q8_leaf(x) -> bool:
+    return isinstance(x, dict) and "q" in x and "scale" in x
+
+
+def _q8(x: jnp.ndarray) -> dict:
+    *lead, last = x.shape
+    pad = (-last) % _BLOCK
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * len(lead) + [(0, pad)])
+    nb = (last + pad) // _BLOCK
+    blocks = x.reshape(*lead, nb, _BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32)}
+
+
+def _dq8(s: dict, like: jnp.ndarray) -> jnp.ndarray:
+    *lead, last = like.shape
+    flat = (s["q"].astype(jnp.float32) * s["scale"]).reshape(*lead, -1)
+    return flat[..., :last]
+
+
+def _encode(x: jnp.ndarray, dtype: str):
+    if dtype == "int8":
+        return _q8(x)
+    if dtype == "bf16":
+        return x.astype(jnp.bfloat16)
+    return x.astype(jnp.float32)
+
+
+def _decode(s, like: jnp.ndarray) -> jnp.ndarray:
+    if is_q8_leaf(s):
+        return _dq8(s, like)
+    return s.astype(jnp.float32)
+
+
+def init_opt_state(params, cfg: AdamWConfig):
+    def zero_like(p):
+        return _encode(jnp.zeros(p.shape, jnp.float32), cfg.moment_dtype)
+
+    return {
+        "m": jax.tree.map(zero_like, params),
+        "v": jax.tree.map(zero_like, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig, lr):
+    """One AdamW step. Returns (params, state, metrics)."""
+    step = state["step"] + 1
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m_s, v_s):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * _decode(m_s, p) + (1 - cfg.b1) * g
+        v = cfg.b2 * _decode(v_s, p) + (1 - cfg.b2) * g * g
+        delta = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, _encode(m, cfg.moment_dtype), _encode(v, cfg.moment_dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = jax.tree.flatten(state["m"], is_leaf=is_q8_leaf)[0]
+    flat_v = jax.tree.flatten(state["v"], is_leaf=is_q8_leaf)[0]
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, {"grad_norm": gnorm}

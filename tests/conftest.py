@@ -1,0 +1,54 @@
+"""Shared fixtures: a small planted-topic corpus and indexes over it.
+
+Session-scoped because index building (BP + k-means) is the slow offline
+step; all tests share the same deterministic artifacts. NOTE: device count
+must stay 1 here — only launch/dryrun.py sets the 512-device XLA flag.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.clustered_index import build_index
+from repro.core.range_daat import Engine
+from repro.core.reorder import arrange
+from repro.data.synth import make_corpus, make_query_log
+
+
+@pytest.fixture(scope="session")
+def corpus():
+    return make_corpus(
+        n_docs=2500, n_terms=3000, n_topics=8, mean_doc_len=120, seed=0
+    )
+
+
+@pytest.fixture(scope="session")
+def query_log(corpus):
+    return make_query_log(corpus, n_queries=12, seed=1)
+
+
+@pytest.fixture(scope="session")
+def clustered_arrangement(corpus):
+    return arrange(corpus, n_ranges=8, strategy="clustered_bp", bp_rounds=4, seed=0)
+
+
+@pytest.fixture(scope="session")
+def index(corpus, clustered_arrangement):
+    return build_index(corpus, arrangement=clustered_arrangement, bits=8)
+
+
+@pytest.fixture(scope="session")
+def random_index(corpus):
+    arr = arrange(corpus, n_ranges=1, strategy="random", seed=0)
+    return build_index(corpus, arrangement=arr, bits=8)
+
+
+@pytest.fixture(scope="session")
+def engine(index):
+    return Engine(index, k=10)
+
+
+@pytest.fixture(scope="session")
+def queries(query_log):
+    return [np.asarray(query_log.terms[i]) for i in range(query_log.n_queries)]

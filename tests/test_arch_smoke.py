@@ -1,0 +1,99 @@
+"""Per-architecture smoke tests: reduced config, one real step per shape.
+
+Every assigned architecture must instantiate and run one train/serve step on
+CPU for each of its (non-skipped) shapes, producing finite outputs of the
+right shape (deliverable f).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.optim.adamw import init_opt_state, AdamWConfig
+
+# family "ir" smoke coverage lives in tests/test_distributed_ir.py (it needs
+# a real index build + oracle, not random batches).
+CASES = [
+    (name, shape)
+    for name, arch in ARCHS.items()
+    for shape, info in arch.shapes().items()
+    if info.skip is None and arch.family != "ir"
+]
+
+
+@pytest.mark.parametrize("name,shape", CASES, ids=[f"{n}-{s}" for n, s in CASES])
+def test_arch_shape_smoke(name, shape):
+    arch = ARCHS[name]
+    cfg = arch.model_config(reduced=True)
+    if arch.family == "gnn":
+        rcfg = arch._resolved(cfg, shape)
+        params = arch.init_params(jax.random.key(0), rcfg)
+    else:
+        params = arch.init_params(jax.random.key(0), cfg)
+    batch = arch.make_batch(cfg, shape, seed=0)
+    step, kind = arch.build_step(cfg, shape)
+
+    if kind == "train":
+        opt_state = init_opt_state(params, AdamWConfig())
+        params2, opt_state2, metrics = jax.jit(step)(params, opt_state, batch)
+        loss = float(jax.device_get(metrics["loss"]))
+        assert np.isfinite(loss), f"{name}/{shape}: loss={loss}"
+        # params actually moved
+        delta = jax.tree.reduce(
+            lambda a, b: a + float(jnp.sum(jnp.abs(b[0].astype(jnp.float32) - b[1].astype(jnp.float32)))),
+            jax.tree.map(lambda x, y: (x, y), params, params2),
+            0.0,
+            is_leaf=lambda x: isinstance(x, tuple),
+        )
+        assert delta > 0
+    else:
+        out = jax.jit(step)(params, batch)
+        leaves = jax.tree.leaves(out)
+        assert leaves, f"{name}/{shape}: empty output"
+        for l in leaves:
+            assert np.all(np.isfinite(np.asarray(l, dtype=np.float32))) or l.dtype in (
+                jnp.int32,
+                jnp.bfloat16,
+            ), f"{name}/{shape}: non-finite output"
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_full_configs_construct(name):
+    """Full (published-scale) configs must instantiate without allocation."""
+    arch = ARCHS[name]
+    cfg = arch.model_config(reduced=False)
+    for shape, info in arch.shapes().items():
+        if info.skip:
+            continue
+        specs = arch.input_specs(cfg, shape)
+        assert jax.tree.leaves(specs), f"{name}/{shape}: no input specs"
+
+
+def test_lm_param_counts_match_published():
+    """count_params must land near the published sizes (sanity on configs)."""
+    from repro.models.transformer import count_params
+
+    qwen3 = ARCHS["qwen3-4b"].model_config()
+    total, _ = count_params(qwen3)
+    assert 3.5e9 < total < 5.0e9, total
+
+    ds67 = ARCHS["deepseek-67b"].model_config()
+    total, _ = count_params(ds67)
+    assert 60e9 < total < 72e9, total
+
+    dsv3 = ARCHS["deepseek-v3-671b"].model_config()
+    total, active = count_params(dsv3)
+    assert 600e9 < total < 720e9, total
+    assert 30e9 < active < 45e9, active  # ~37B active
+
+    # NOTE: the assignment block pins moonshot at 48L x 64e top-6 — that is
+    # ~28B total (Moonlight's published 16B uses 27 layers); we follow the
+    # assigned spec, so assert against the spec-implied count.
+    moon = ARCHS["moonshot-v1-16b-a3b"].model_config()
+    total, active = count_params(moon)
+    assert 24e9 < total < 32e9, total
+    assert 2e9 < active < 6e9, active

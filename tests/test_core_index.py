@@ -1,0 +1,91 @@
+"""Index construction invariants (paper §3 index organization)."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.clustered_index import BLOCK, build_index
+from repro.core.quantize import fit_quantizer
+from repro.core.reorder import arrange
+from repro.data.synth import make_corpus
+
+
+def test_corpus_deterministic():
+    a = make_corpus(n_docs=300, n_terms=500, n_topics=4, seed=5)
+    b = make_corpus(n_docs=300, n_terms=500, n_topics=4, seed=5)
+    assert a.fingerprint() == b.fingerprint()
+    c = make_corpus(n_docs=300, n_terms=500, n_topics=4, seed=6)
+    assert a.fingerprint() != c.fingerprint()
+
+
+def test_arrangement_is_permutation(corpus, clustered_arrangement):
+    arr = clustered_arrangement
+    assert np.array_equal(np.sort(arr.doc_order), np.arange(corpus.n_docs))
+    assert arr.range_ends[-1] == corpus.n_docs
+    assert np.all(np.diff(arr.range_ends) > 0)
+
+
+def test_quantizer_monotone_and_bounded():
+    scores = np.asarray([0.01, 0.5, 1.0, 3.7, 9.99], np.float32)
+    q = fit_quantizer(scores, bits=8)
+    imp = q.quantize(scores)
+    assert np.all(imp >= 1) and np.all(imp <= 255)
+    assert np.all(np.diff(imp) >= 0)  # monotone
+    assert imp[-1] == 255  # max maps to top code
+
+
+def test_blocks_partition_postings(index):
+    # Every posting belongs to exactly one block; blocks never cross ranges.
+    covered = np.zeros(index.nnz, dtype=np.int32)
+    for b in range(index.n_blocks):
+        s, l = int(index.blk_start[b]), int(index.blk_len[b])
+        assert 0 < l <= BLOCK
+        covered[s : s + l] += 1
+        d = index.docs[s : s + l]
+        r = index.blk_range[b]
+        lo = index.range_starts[r]
+        hi = index.range_ends[r]
+        assert np.all((d >= lo) & (d < hi))
+        assert int(index.blk_maxdoc[b]) == int(d[-1])
+        assert int(index.blk_maximp[b]) == int(index.impacts[s : s + l].max())
+    assert np.all(covered == 1)
+
+
+def test_range_bounds_are_true_maxima(index):
+    rng = np.random.default_rng(0)
+    terms = rng.choice(index.n_terms, size=50, replace=False)
+    range_of = np.searchsorted(index.range_ends, index.docs, side="right")
+    for t in terms:
+        s, e = index.ptr[t], index.ptr[t + 1]
+        if s == e:
+            assert np.all(index.bounds_dense[t] == 0)
+            continue
+        for r in range(index.n_ranges):
+            mask = range_of[s:e] == r
+            expect = int(index.impacts[s:e][mask].max()) if mask.any() else 0
+            assert int(index.bounds_dense[t, r]) == expect
+        assert int(index.term_bound[t]) == int(index.bounds_dense[t].max())
+
+
+def test_postings_sorted_within_term(index):
+    for t in range(0, index.n_terms, 97):
+        s, e = index.ptr[t], index.ptr[t + 1]
+        d = index.docs[s:e]
+        assert np.all(np.diff(d) > 0)  # strictly increasing docids
+
+
+def test_uniform_window_strategy():
+    c = make_corpus(n_docs=400, n_terms=300, n_topics=4, seed=2)
+    arr = arrange(c, n_ranges=1, strategy="bp", bp_rounds=2)
+    idx = build_index(c, arrangement=arr)
+    assert idx.n_ranges == 1
+    assert idx.space_report()["total_gib"] > 0
+
+
+@pytest.mark.parametrize("strategy", ["random", "clustered", "clustered_bp"])
+def test_strategies_build(strategy):
+    c = make_corpus(n_docs=300, n_terms=300, n_topics=4, seed=3)
+    arr = arrange(c, n_ranges=4, strategy=strategy, bp_rounds=2)
+    idx = build_index(c, arrangement=arr)
+    assert idx.nnz == c.nnz

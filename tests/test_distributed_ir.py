@@ -1,0 +1,86 @@
+"""Sharded anytime IR: broker merge == per-shard oracles (partitioned §7.2).
+
+The multi-device variant runs in a subprocess with 8 forced host devices
+(tests themselves must stay single-device per the dry-run contract).
+"""
+
+from __future__ import annotations
+
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.oracle import exhaustive_topk
+
+_SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np
+from repro.data.synth import make_corpus, make_query_log
+from repro.serve.distributed_ir import (build_sharded_index, plan_queries,
+                                        sharded_anytime_query)
+from repro.core.oracle import exhaustive_topk
+from repro.distributed.sharding import ShardCtx
+
+corpus = make_corpus(n_docs=1600, n_terms=1200, n_topics=6, mean_doc_len=40, seed=3)
+ql = make_query_log(corpus, n_queries=8, seed=4)
+M = 4
+arrays, engines = build_sharded_index(corpus, n_shards=M, n_ranges_per_shard=4)
+tables = plan_queries(engines, ql.terms)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+ctx = ShardCtx(mesh=mesh, data_axes=("data",), model_axis="model")
+vals, ids, ranges = sharded_anytime_query(arrays, tables, ctx)
+vals = np.asarray(vals); ids = np.asarray(ids)
+
+# Oracle: merge per-shard exhaustive top-k (same global quantizer).
+ok = 0
+for qi in range(ql.n_queries):
+    merged = []
+    for m, e in enumerate(engines):
+        oid, osc = exhaustive_topk(e.index, ql.terms[qi], 10)
+        merged.extend(osc.tolist())
+    expect = sorted(merged, reverse=True)[:10]
+    got = sorted([v for v in vals[qi].tolist() if v > 0], reverse=True)
+    expect = [e for e in expect if e > 0]
+    assert got == expect, (qi, got, expect)
+    ok += 1
+print("SHARDED_OK", ok)
+"""
+
+
+@pytest.mark.slow
+def test_sharded_query_matches_merged_oracles():
+    out = subprocess.run(
+        [sys.executable, "-c", _SUBPROC],
+        capture_output=True,
+        text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        cwd="/root/repo",
+        timeout=900,
+    )
+    assert "SHARDED_OK 8" in out.stdout, out.stdout + out.stderr
+
+
+def test_single_shard_reduces_to_engine(corpus, engine, queries, index):
+    """M=1 sharded build must reproduce the single-node engine results."""
+    import jax
+
+    from repro.distributed.sharding import ShardCtx
+    from repro.serve.distributed_ir import (
+        build_sharded_index,
+        plan_queries,
+        sharded_anytime_query,
+    )
+
+    arrays, engines = build_sharded_index(corpus, n_shards=1, n_ranges_per_shard=8)
+    q = np.stack([queries[0], queries[1]])
+    tables = plan_queries(engines, q)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    ctx = ShardCtx(mesh=mesh, data_axes=("data",), model_axis="model")
+    vals, ids, _ = sharded_anytime_query(arrays, tables, ctx)
+    for qi in range(2):
+        _, osc = exhaustive_topk(engines[0].index, q[qi], 10)
+        got = sorted([v for v in np.asarray(vals[qi]).tolist() if v > 0], reverse=True)
+        assert got == sorted(osc.tolist(), reverse=True)

@@ -1,0 +1,55 @@
+"""Deliverable guard: every (arch x shape x mesh) cell has a passing
+dry-run artifact (skipped in fresh checkouts before `dryrun --all`)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+import pytest
+
+from repro.configs.registry import all_cells
+
+RESULTS = os.path.join("benchmarks", "results", "dryrun")
+
+
+@pytest.mark.skipif(
+    not os.path.isdir(RESULTS) or not os.listdir(RESULTS),
+    reason="dry-run results not generated (run repro.launch.dryrun --all)",
+)
+def test_every_cell_compiled_on_both_meshes():
+    missing, failed = [], []
+    for arch, shape, info in all_cells():
+        for mesh in ("single", "multi"):
+            path = os.path.join(RESULTS, f"{arch}__{shape}__{mesh}.json")
+            if not os.path.exists(path):
+                missing.append((arch, shape, mesh))
+                continue
+            d = json.load(open(path))
+            if not d.get("ok"):
+                failed.append((arch, shape, mesh, d.get("error", "")[:80]))
+    assert not missing, f"missing dry-run cells: {missing}"
+    assert not failed, f"failed dry-run cells: {failed}"
+
+
+@pytest.mark.skipif(
+    not os.path.isdir(RESULTS) or not os.listdir(RESULTS),
+    reason="dry-run results not generated",
+)
+def test_perf_variants_present_and_fit_hbm():
+    """§Perf optimized variants exist and fit the 16 GiB v5e budget."""
+    cells = [
+        ("deepseek-67b__decode_32k__single__v-split_kv.json", 16.0),
+        ("deepseek-v3-671b__decode_32k__single__v-split_kv.json", 16.0),
+        ("deepseek-67b__prefill_32k__single__v-split_kv.json", 16.0),
+        ("graphsage-reddit__ogb_products__single__v-sharded.json", 16.0),
+        ("anytime-ir__serve_anytime__single__v-i8.json", 16.0),
+        ("deepseek-v3-671b__train_4k__single.json", 16.0),
+    ]
+    for name, budget_gib in cells:
+        path = os.path.join(RESULTS, name)
+        assert os.path.exists(path), f"missing variant artifact: {name}"
+        d = json.load(open(path))
+        assert d.get("ok"), name
+        peak = d["memory"].get("peak_memory_in_bytes", 0) / 2**30
+        assert peak <= budget_gib, f"{name}: {peak:.1f} GiB > {budget_gib}"

@@ -1,0 +1,43 @@
+"""RBO / RBP / AP sanity and known-value tests."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.metrics import average_precision, rbo, rbp
+
+
+def test_rbo_identical_is_one():
+    assert rbo([1, 2, 3, 4], [1, 2, 3, 4]) == 1.0
+
+
+def test_rbo_disjoint_is_zero():
+    assert rbo([1, 2, 3], [4, 5, 6], extrapolate=False) == 0.0
+
+
+def test_rbo_partial_between():
+    v = rbo([1, 2, 3, 4], [1, 2, 4, 3], phi=0.9)
+    assert 0.0 < v <= 1.0
+
+
+def test_rbo_monotone_in_agreement():
+    base = [1, 2, 3, 4, 5]
+    closer = [1, 2, 3, 5, 4]
+    farther = [5, 4, 3, 2, 1]
+    assert rbo(base, closer) > rbo(base, farther)
+
+
+def test_rbp_known_value():
+    # Single relevant doc at rank 1: RBP = (1-phi).
+    assert np.isclose(rbp([7], {7: 1.0}, phi=0.8), 0.2)
+    # Ranks 1 and 2 relevant: (1-phi)(1 + phi).
+    assert np.isclose(rbp([7, 8], [7, 8], phi=0.8), 0.2 * 1.8)
+
+
+def test_ap_perfect():
+    assert average_precision([1, 2, 3], [1, 2, 3]) == 1.0
+
+
+def test_ap_half():
+    # Relevant = {1}; ranking = [2, 1] -> AP = 1/2.
+    assert np.isclose(average_precision([2, 1], [1]), 0.5)

@@ -1,0 +1,58 @@
+"""Unit tests for the §6 termination policies (Eqs. 3-7)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.anytime import Fixed, Overshoot, Predictive, Reactive, Undershoot
+
+
+def test_overshoot_eq3():
+    p = Overshoot()
+    assert p.decide(49.9, 3, 50.0)
+    assert not p.decide(50.0, 3, 50.0)
+
+
+def test_undershoot_eq4():
+    p = Undershoot(t_max_ms=5.0)
+    assert p.decide(44.9, 3, 50.0)
+    assert not p.decide(45.0, 3, 50.0)  # 45 + 5 = 50, not < 50
+
+
+def test_predictive_eq5():
+    p = Predictive(alpha=1.0)
+    # mean range time = 10ms over 2 ranges -> continue iff 20 + 10 < B
+    assert p.decide(20.0, 2, 31.0)
+    assert not p.decide(20.0, 2, 30.0)
+    assert p.decide(0.0, 0, 1.0)  # first range always admitted
+    p2 = Predictive(alpha=2.0)
+    assert not p2.decide(20.0, 2, 40.0)  # 20 + 2*10 = 40, not < 40
+    assert p2.decide(20.0, 2, 41.0)
+
+
+def test_reactive_eq7_miss_grows_alpha():
+    p = Reactive(alpha=1.0, beta=1.5, q=0.01)
+    p.on_query_end(60.0, 50.0)  # miss
+    assert np.isclose(p.alpha, 1.5)
+
+
+def test_reactive_eq7_hundred_hits_shrink_two_thirds():
+    """Paper §6.4: with beta=1.5, 100 within-limit queries scale alpha by 2/3."""
+    p = Reactive(alpha=1.0, beta=1.5, q=0.01)
+    for _ in range(100):
+        p.on_query_end(10.0, 50.0)
+    assert np.isclose(p.alpha, 2.0 / 3.0, rtol=1e-6)
+
+
+def test_reactive_bounded():
+    p = Reactive(alpha=1.0, beta=2.0, q=0.01, alpha_max=4.0)
+    for _ in range(10):
+        p.on_query_end(100.0, 1.0)
+    assert p.alpha <= 4.0
+
+
+def test_fixed_policy():
+    p = Fixed(5)
+    assert p.decide(1e9, 4, 0.0)
+    assert not p.decide(0.0, 5, 1e9)
+    assert p.name == "Fixed-5"

@@ -1,0 +1,105 @@
+"""End-to-end behaviour tests for the paper's system.
+
+Full pipeline: synthetic corpus -> topical clustering + BP reordering ->
+cluster-skipping index -> BoundSum range ordering -> anytime traversal under
+each §6 termination policy, validated against the exhaustive oracle. SLA
+decision logic is additionally exercised with a deterministic fake clock so
+compliance assertions do not depend on container timing noise.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.anytime import (
+    Fixed,
+    Overshoot,
+    Predictive,
+    Reactive,
+    Undershoot,
+    run_query_anytime,
+)
+from repro.core.metrics import rbo
+from repro.core.oracle import exhaustive_topk
+
+
+class FakeClock:
+    """Deterministic clock: advances ``tick`` seconds per call."""
+
+    def __init__(self, tick_s: float = 0.001):
+        self.t = 0.0
+        self.tick = tick_s
+
+    def __call__(self) -> float:
+        self.t += self.tick
+        return self.t
+
+
+@pytest.mark.parametrize(
+    "policy",
+    [None, Fixed(3), Overshoot(), Undershoot(2.0), Predictive(1.0), Reactive()],
+)
+def test_every_policy_runs_end_to_end(engine, queries, policy):
+    plan = engine.plan(queries[0])
+    res = run_query_anytime(engine, plan, policy=policy, budget_ms=50.0)
+    assert res.ranges_processed >= 0
+    assert res.exit_reason in ("exhausted", "safe", "policy")
+    assert np.all(np.diff(res.scores) <= 0)  # sorted descending
+
+
+def test_unlimited_budget_is_rank_safe(engine, index, queries):
+    for q in queries[:5]:
+        plan = engine.plan(q)
+        res = run_query_anytime(engine, plan, policy=None)
+        oid, osc = exhaustive_topk(index, q, engine.k)
+        # Exact ranking match (deterministic docid tie-break on both sides).
+        assert res.doc_ids.tolist() == oid.tolist()
+        assert res.scores.tolist() == osc.tolist()
+
+
+def test_undershoot_never_violates_with_bounded_range_time(engine, queries):
+    """Undershoot(t_max) must finish within B when ranges cost <= t_max."""
+    clock = FakeClock(tick_s=0.0005)  # every clock call costs 0.5 ms
+    plan = engine.plan(queries[1])
+    # Each range costs ~2 clock calls = ~1 ms << t_max = 5 ms.
+    res = run_query_anytime(
+        engine, plan, policy=Undershoot(5.0), budget_ms=20.0, clock=clock
+    )
+    assert res.elapsed_ms <= 25.0  # B plus measurement slack, never a range over
+
+
+def test_predictive_terminates_under_pressure(engine, queries):
+    clock = FakeClock(tick_s=0.004)  # 4 ms per clock call -> ranges look slow
+    plan = engine.plan(queries[1])
+    res = run_query_anytime(
+        engine, plan, policy=Predictive(1.0), budget_ms=30.0, clock=clock
+    )
+    assert res.exit_reason in ("policy", "safe", "exhausted")
+    assert res.ranges_processed < plan.order_host.shape[0] or res.exit_reason != "policy"
+
+
+def test_reactive_feedback_loop_adapts(engine, queries):
+    pol = Reactive(alpha=1.0, beta=1.5, q=0.01)
+    for q in queries[:6]:
+        plan = engine.plan(q)
+        run_query_anytime(engine, plan, policy=pol, budget_ms=0.5)
+    assert len(pol.trace) == 6
+    assert pol.alpha != 1.0  # feedback moved alpha
+
+
+def test_anytime_quality_improves_with_ranges(engine, index, queries):
+    """Fig 7 behaviour: more ranges processed -> higher RBO vs exhaustive."""
+    mean_rbo = {1: [], 4: [], 10**9: []}
+    for q in queries:
+        oid, _ = exhaustive_topk(index, q, 10)
+        plan = engine.plan(q)
+        for n in mean_rbo:
+            res = engine.traverse(plan, max_ranges=n, safe_stop=n == 10**9)
+            ids, _ = engine.topk_docs(res.state)
+            mean_rbo[n].append(rbo(ids.tolist(), oid.tolist(), phi=0.8))
+    m1 = float(np.mean(mean_rbo[1]))
+    m4 = float(np.mean(mean_rbo[4]))
+    mall = float(np.mean(mean_rbo[10**9]))
+    assert m1 <= m4 + 1e-9 <= mall + 1e-9
+    assert mall >= 0.999  # unlimited == exhaustive

@@ -1,0 +1,126 @@
+"""Traversal correctness: rank-safety, pruning soundness, anytime behavior."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.metrics import rbo
+from repro.core.oracle import exhaustive_scores, exhaustive_topk
+from repro.core.range_daat import Engine
+from repro.core.anytime import run_query_anytime, Fixed
+
+
+def _score_multiset(state):
+    ids = np.asarray(state.ids)
+    vals = np.asarray(state.vals)
+    return sorted(vals[ids >= 0].tolist(), reverse=True)
+
+
+def test_safe_traversal_matches_oracle(engine, index, queries):
+    for q in queries:
+        plan = engine.plan(q)
+        res = engine.traverse(plan)
+        _, osc = exhaustive_topk(index, q, engine.k)
+        assert _score_multiset(res.state) == sorted(osc.tolist(), reverse=True)
+
+
+def test_safe_traversal_k100(index, queries):
+    eng = Engine(index, k=100)
+    for q in queries[:4]:
+        res = eng.traverse(eng.plan(q))
+        _, osc = exhaustive_topk(index, q, 100)
+        assert _score_multiset(res.state) == sorted(osc.tolist(), reverse=True)
+
+
+def test_range_oblivious_also_safe(index, queries):
+    """Docid-order traversal with global bounds must still be rank-safe."""
+    eng = Engine(index, k=10, ordering="docid", bounds="global")
+    for q in queries[:6]:
+        res = eng.traverse(eng.plan(q))
+        _, osc = exhaustive_topk(index, q, 10)
+        assert _score_multiset(res.state) == sorted(osc.tolist(), reverse=True)
+
+
+def test_no_block_pruning_still_safe(engine, index, queries):
+    for q in queries[:4]:
+        res = engine.traverse(engine.plan(q), prune_blocks=False)
+        _, osc = exhaustive_topk(index, q, 10)
+        assert _score_multiset(res.state) == sorted(osc.tolist(), reverse=True)
+
+
+def test_budget_scores_never_exceed_truth(engine, index, queries):
+    """Anytime (unsafe) exits return only true-or-partial scores."""
+    for q in queries[:6]:
+        plan = engine.plan(q)
+        res = engine.traverse(plan, budget_postings=500, safe_stop=False)
+        truth = exhaustive_scores(index, q)
+        ids = np.asarray(res.state.ids)
+        vals = np.asarray(res.state.vals)
+        for d, v in zip(ids, vals):
+            if d >= 0:
+                assert v <= truth[d]
+
+
+def test_budget_monotone_quality(engine, index, queries):
+    """More budget -> same or better RBO vs exhaustive (on average)."""
+    deltas = []
+    for q in queries[:8]:
+        plan = engine.plan(q)
+        oid, _ = exhaustive_topk(index, q, 10)
+        lo = engine.traverse(plan, budget_postings=300, safe_stop=False)
+        hi = engine.traverse(plan, budget_postings=10**9)
+        ids_lo, _ = engine.topk_docs(lo.state)
+        ids_hi, _ = engine.topk_docs(hi.state)
+        deltas.append(
+            rbo(ids_hi.tolist(), oid.tolist()) - rbo(ids_lo.tolist(), oid.tolist())
+        )
+    assert np.mean(deltas) >= 0.0
+
+
+def test_fixed_policy_limits_ranges(engine, queries):
+    plan = engine.plan(queries[0])
+    res = run_query_anytime(engine, plan, policy=Fixed(2), budget_ms=1e9)
+    assert res.ranges_processed <= 2
+
+
+def test_host_executor_matches_oracle_when_unlimited(engine, index, queries):
+    for q in queries[:4]:
+        plan = engine.plan(q)
+        res = run_query_anytime(engine, plan, policy=None, budget_ms=float("inf"))
+        oid, osc = exhaustive_topk(index, q, 10)
+        assert sorted(res.scores.tolist(), reverse=True) == sorted(
+            osc.tolist(), reverse=True
+        )
+        assert res.exit_reason in ("exhausted", "safe")
+
+
+def test_boundsum_order_front_loads_mass(engine, index, queries):
+    """BoundSum-first processing finds top-1 earlier than docid order."""
+    wins = 0
+    total = 0
+    for q in queries:
+        plan = engine.plan(q)
+        oid, _ = exhaustive_topk(index, q, 1)
+        if oid.size == 0:
+            continue
+        top_range = int(
+            np.searchsorted(index.range_ends, oid[0], side="right")
+        )
+        pos_bs = int(np.nonzero(plan.order_host == top_range)[0][0])
+        pos_docid = top_range
+        total += 1
+        if pos_bs <= pos_docid:
+            wins += 1
+    assert total > 0 and wins / total >= 0.5
+
+
+def test_safe_exit_skips_work_vs_exhaustive(engine, queries):
+    """Safe termination should usually process fewer than all ranges."""
+    processed = []
+    R = engine.index.n_ranges
+    for q in queries:
+        res = engine.traverse(engine.plan(q))
+        processed.append(int(res.ranges_processed))
+    assert min(processed) <= R  # sanity
+    assert np.mean(processed) <= R
