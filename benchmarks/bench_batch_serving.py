@@ -1,0 +1,114 @@
+"""Batched anytime serving: queries/sec and per-query P99 vs batch size.
+
+Compares, over the same index and query log:
+
+  * ``seq-host``   — the paper's host-driven loop (one jitted step per range,
+                     wall-clock between steps; core.anytime, policy-free);
+  * ``seq-device`` — one ``device_traverse`` dispatch per query;
+  * ``batch-N``    — the serving subsystem: shape-bucketed
+                     ``BatchEngine.run_batch`` at N in {1, 8, 32}, micro-
+                     batches cut from the log in arrival order.
+
+Per-query latency for a micro-batch is the batch service time (every member
+waits for the dispatch); throughput is end-to-end wall clock. A budgeted
+variant (per-query postings cap) shows the anytime knob under batching.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.anytime import run_query_anytime
+from repro.serving import BatchEngine, BucketSpec
+
+BATCH_SIZES = (1, 8, 32)
+BUDGET = 20_000  # postings — the anytime knob for the budgeted rows
+
+
+def _row(name, batch, times_ms, wall_s, n, budget="unlimited"):
+    return {
+        "bench": "batch_serving",
+        "engine": name,
+        "batch": batch,
+        "budget": budget,
+        "qps": round(n / wall_s, 2),
+        **{k + "_ms": round(v, 3) for k, v in common.percentiles(times_ms).items()},
+    }
+
+
+def _serve_batched(beng, plans, bs, budget=None):
+    """Replay plans in arrival-order micro-batches of bs; time each batch."""
+    times, t0 = [], time.perf_counter()
+    for lo in range(0, len(plans), bs):
+        chunk = plans[lo : lo + bs]
+        b = None if budget is None else [budget] * len(chunk)
+        t1 = time.perf_counter()
+        beng.run_batch(chunk, budget_postings=b)
+        ms = (time.perf_counter() - t1) * 1e3
+        times.extend([ms] * len(chunk))  # every member waits for the batch
+    return times, time.perf_counter() - t0
+
+
+def run(small: bool = False):
+    if small:
+        from repro.data.synth import make_corpus, make_query_log
+
+        corpus = make_corpus(n_docs=4000, n_terms=3000, n_topics=8,
+                             mean_doc_len=80, seed=0)
+        ql = make_query_log(corpus, n_queries=64, seed=7)
+        idx = common.build_index_cached(
+            corpus, cache_dir=common.CACHE, n_ranges=8, strategy="clustered",
+        )
+    else:
+        corpus = common.bench_corpus()
+        ql = common.bench_queries(corpus, n=96, seed=7)
+        idx = common.bench_index(corpus, "clustered_bp")
+    eng = common.make_engine(idx, k=10)
+    queries = [ql.terms[i] for i in range(ql.n_queries)]
+    n = len(queries)
+    plans = [eng.plan(q) for q in queries]
+
+    rows = []
+
+    # Sequential host-driven loop (the baseline the batch path must beat).
+    common.warmup_engine(eng, queries)
+    times, t0 = [], time.perf_counter()
+    for q, plan in zip(queries, plans):
+        res = run_query_anytime(eng, plan, policy=None)
+        times.append(res.elapsed_ms)
+    host_wall = time.perf_counter() - t0
+    rows.append(_row("seq-host", 1, times, host_wall, n))
+
+    # Sequential device-driven loop.
+    times, t0 = [], time.perf_counter()
+    for plan in plans:
+        t1 = time.perf_counter()
+        eng.traverse(plan).state.vals.block_until_ready()
+        times.append((time.perf_counter() - t1) * 1e3)
+    rows.append(_row("seq-device", 1, times, time.perf_counter() - t0, n))
+
+    # Batched serving engine at each batch size, unlimited and budgeted.
+    for bs in BATCH_SIZES:
+        beng = BatchEngine(eng, BucketSpec(max_batch=bs))
+        widths = {beng.spec.width_bucket(p.blk_tab.shape[1]) for p in plans}
+        beng.warmup(sorted(widths))  # compile outside the timed region
+        for budget, label in ((None, "unlimited"), (BUDGET, str(BUDGET))):
+            times, wall = _serve_batched(beng, plans, bs, budget)
+            r = _row(f"batch-{bs}", bs, times, wall, n, budget=label)
+            r["programs"] = sorted(beng.compiled_shapes)
+            rows.append(r)
+
+    seq_qps = rows[0]["qps"]
+    for r in rows:
+        r["speedup_vs_seq_host"] = round(r["qps"] / seq_qps, 2)
+    common.save_result("batch_serving", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run(small="--small" in sys.argv):
+        print(row)

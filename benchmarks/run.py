@@ -23,6 +23,7 @@ MODULES = [
     ("T6_reactive", "benchmarks.bench_reactive"),
     ("T7_partitions", "benchmarks.bench_partitions"),
     ("F11_scaling", "benchmarks.bench_scaling"),
+    ("S1_batch_serving", "benchmarks.bench_batch_serving"),
     ("T8_failures", "benchmarks.bench_failures"),
     ("Q_quantization", "benchmarks.bench_quantization"),
 ]
@@ -68,6 +69,15 @@ def _headline(name: str, rows) -> tuple[float, str]:
         if name == "F11_scaling":
             r = next(x for x in rows if x["batch"] == 32 and x["budget"] == "unlimited")
             return 1e6 / max(r["qps"], 1e-9), f"speedup_b32={r['speedup_vs_b1']}x"
+        if name == "S1_batch_serving":
+            r = next(
+                x for x in rows if x["engine"] == "batch-32"
+                and x["budget"] == "unlimited"
+            )
+            return (
+                1e6 / max(r["qps"], 1e-9),
+                f"qps_b32={r['qps']}_speedup={r['speedup_vs_seq_host']}x",
+            )
         if name == "Q_quantization":
             r8 = next(x for x in rows if x["bits"] == 8)
             r4 = next(x for x in rows if x["bits"] == 4)

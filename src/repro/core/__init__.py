@@ -10,5 +10,11 @@ from repro.core.anytime import (  # noqa: F401
     run_query_anytime,
 )
 from repro.core.clustered_index import BLOCK, ClusteredIndex, build_index  # noqa: F401
-from repro.core.range_daat import Engine, TopKState, device_traverse  # noqa: F401
+from repro.core.range_daat import (  # noqa: F401
+    Engine,
+    TopKState,
+    TraverseResult,
+    batched_traverse,
+    device_traverse,
+)
 from repro.core.reorder import Arrangement, arrange  # noqa: F401

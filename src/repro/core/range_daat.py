@@ -31,11 +31,17 @@ from repro.kernels.range_scorer import ops as scorer_ops
 __all__ = [
     "DeviceIndex",
     "TopKState",
+    "TraverseResult",
     "QueryPlan",
     "Engine",
     "init_state",
     "score_range_step",
     "device_traverse",
+    "batched_traverse",
+    "topk_docs",
+    "batched_topk_docs",
+    "exit_reason",
+    "exit_reasons",
 ]
 
 
@@ -218,6 +224,94 @@ def device_traverse(
     )
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=("s_pad", "k", "impl", "prune_blocks", "safe_stop", "interpret"),
+)
+def batched_traverse(
+    dix: DeviceIndex,
+    blk_tabs: jnp.ndarray,  # [N, R, B] int32, -1 padded
+    rest_tabs: jnp.ndarray,  # [N, R, B] int32
+    orders: jnp.ndarray,  # [N, R] int32
+    ordered_bounds: jnp.ndarray,  # [N, R] int32
+    budgets: jnp.ndarray,  # [N] int32 — per-query postings budgets
+    max_ranges: jnp.ndarray,  # [N] int32 — per-query range budgets
+    *,
+    s_pad: int,
+    k: int,
+    safe_stop: bool = True,
+    prune_blocks: bool = True,
+    impl: str = "xla",
+    interpret: bool = True,
+) -> TraverseResult:
+    """vmapped ``device_traverse`` over a stacked batch of query plans.
+
+    The index is broadcast (in_axes=None); every plan leaf and both budgets
+    map over the leading batch axis, so one lagging query cannot consume
+    another query's budget — each lane carries its own stop flags and the
+    while_loop simply runs until the *last* lane finishes, with finished
+    lanes masked to no-ops by their own ``exit_*`` state. The returned
+    ``TraverseResult`` has batched leaves: ``state.vals`` is [N, k],
+    ``ranges_processed`` / ``exit_safe`` / ``exit_budget`` are [N].
+    """
+
+    def one(bt, rt, o, ob, bud, mr):
+        return device_traverse(
+            dix,
+            bt,
+            rt,
+            o,
+            ob,
+            s_pad=s_pad,
+            k=k,
+            budget_postings=bud,
+            max_ranges=mr,
+            safe_stop=safe_stop,
+            prune_blocks=prune_blocks,
+            impl=impl,
+            interpret=interpret,
+        )
+
+    return jax.vmap(one)(
+        blk_tabs, rest_tabs, orders, ordered_bounds, budgets, max_ranges
+    )
+
+
+def topk_docs(state: TopKState) -> tuple[np.ndarray, np.ndarray]:
+    """(docids, scores) for one query's state with empty slots stripped."""
+    vals = np.asarray(state.vals)
+    ids = np.asarray(state.ids)
+    keep = ids >= 0
+    return ids[keep], vals[keep]
+
+
+def batched_topk_docs(state: TopKState) -> list[tuple[np.ndarray, np.ndarray]]:
+    """Per-query (docids, scores) lists from a vmapped [N, k] state."""
+    vals = np.asarray(state.vals)
+    ids = np.asarray(state.ids)
+    out = []
+    for n in range(ids.shape[0]):
+        keep = ids[n] >= 0
+        out.append((ids[n][keep], vals[n][keep]))
+    return out
+
+
+def exit_reason(safe: bool, budget: bool) -> str:
+    """Collapse the two exit flags into the host-facing reason string."""
+    if safe:
+        return "safe"
+    if budget:
+        return "budget"
+    return "exhausted"
+
+
+def exit_reasons(result: TraverseResult) -> list[str]:
+    """Per-query exit reason strings from a batched ``TraverseResult``."""
+    safe = np.asarray(result.exit_safe).reshape(-1)
+    budget = np.asarray(result.exit_budget).reshape(-1)
+    return [exit_reason(bool(s), bool(b)) for s, b in zip(safe, budget)]
+
+
 # --------------------------------------------------------------------------
 # Host-facing engine
 # --------------------------------------------------------------------------
@@ -370,9 +464,12 @@ class Engine:
         )
 
     # ----------------------------------------------------------------- util
-    def topk_docs(self, state: TopKState) -> tuple[np.ndarray, np.ndarray]:
-        """(docids, scores) with empty slots stripped, host-side."""
-        vals = np.asarray(state.vals)
-        ids = np.asarray(state.ids)
-        keep = ids >= 0
-        return ids[keep], vals[keep]
+    def topk_docs(self, state: TopKState):
+        """(docids, scores) with empty slots stripped, host-side.
+
+        Accepts a single-query [k] state or a vmapped [N, k] state; the
+        latter returns a per-query list of (docids, scores) pairs.
+        """
+        if np.asarray(state.ids).ndim == 2:
+            return batched_topk_docs(state)
+        return topk_docs(state)

@@ -8,7 +8,41 @@ import jax
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-__all__ = ["ShardCtx", "named", "data_spec"]
+__all__ = ["ShardCtx", "named", "data_spec", "shard_map", "axis_size"]
+
+
+def axis_size(name):
+    """Mesh-axis size inside a mapped body; pre-0.5 jax lacks lax.axis_size."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None, check_vma=None):
+    """``jax.shard_map`` with fallback to the pre-0.5 experimental API.
+
+    Callers use the modern keyword surface (``axis_names`` = the manual mesh
+    axes, ``check_vma``); on older jax this translates to
+    ``jax.experimental.shard_map.shard_map`` where the equivalents are
+    ``auto`` (the *complement*: axes left automatic) and ``check_rep``.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = frozenset(axis_names)
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    kw = {}
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+    if check_vma is not None:
+        kw["check_rep"] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
 
 
 @dataclasses.dataclass(frozen=True)

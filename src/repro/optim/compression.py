@@ -7,9 +7,9 @@ that wire traffic ~4x by exchanging int8 block-quantized gradients
 of an fp32 all-reduce. An error-feedback buffer re-injects the quantization
 error next step (EF-SGD construction — convergence-neutral in practice).
 
-Implementation: ``jax.shard_map(axis_names={'pod'})`` makes only the pod
-axis manual; within a pod the gradient computation stays under GSPMD
-(TP/EP/data sharding untouched). The s8 all-gather is visible in the
+Implementation: an ALL-manual ``shard_map`` whose body only references the
+pod axis (non-pod axes are manual-but-unreferenced; partial-manual trips an
+XLA-CPU partitioner crash). The s8 all-gather is visible in the
 dry-run HLO — the §Perf collective table picks it up directly.
 
 Error buffers carry a leading pod dimension (per-pod state); callers shard
@@ -21,6 +21,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import axis_size, shard_map
 
 __all__ = ["compress_psum_pod", "init_error_buffers"]
 
@@ -62,7 +64,7 @@ def compress_psum_pod(grad_fn, mesh, pod_axis: str = "pod"):
 
     def body(batch_shard, err):
         g = grad_fn(batch_shard)
-        n_pods = jax.lax.axis_size(pod_axis)
+        n_pods = axis_size(pod_axis)
 
         def one(gl, el):
             el = el[0]  # leading pod dim -> local slice
@@ -86,11 +88,14 @@ def compress_psum_pod(grad_fn, mesh, pod_axis: str = "pod"):
         )
         return grads, new_err
 
-    return jax.shard_map(
+    # ALL-manual (every mesh axis listed): pod-only partial-manual hits the
+    # same XLA-CPU partitioner crash as the attention psums. Non-pod axes are
+    # simply unreferenced in the body, so the collective pattern is unchanged.
+    return shard_map(
         body,
         mesh=mesh,
         in_specs=(P(pod_axis), P(pod_axis)),
         out_specs=(P(), P(pod_axis)),
-        axis_names=frozenset({pod_axis}),
+        axis_names=frozenset(mesh.axis_names),
         check_vma=False,
     )

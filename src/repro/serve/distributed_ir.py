@@ -33,7 +33,7 @@ from repro.core import range_daat
 from repro.core.clustered_index import build_index
 from repro.core.range_daat import DeviceIndex
 from repro.data.synth import Corpus
-from repro.distributed.sharding import ShardCtx
+from repro.distributed.sharding import ShardCtx, shard_map
 
 __all__ = ["ShardedIndexArrays", "build_sharded_index", "sharded_anytime_query", "sharded_query_specs"]
 
@@ -245,7 +245,7 @@ def make_sharded_query_fn(ctx: ShardCtx, *, s_pad: int, k: int, budget: int):
         return out_v, out_i, jax.lax.psum(jnp.sum(nr), m_axis)
 
     arr_specs = tuple([P(m_axis, None)] * 6)
-    fn = jax.shard_map(
+    fn = shard_map(
         body,
         mesh=ctx.mesh,
         in_specs=(

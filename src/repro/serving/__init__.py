@@ -1,0 +1,5 @@
+# Batched anytime serving: shape-bucketed, vmapped device traversal with
+# per-query budgets, plus the SLA-governed micro-batching request loop.
+from repro.serving.batch_engine import BatchEngine, BatchResult, INT32_MAX  # noqa: F401
+from repro.serving.bucketing import BatchedPlan, BucketSpec, bucket_pow2, stack_plans  # noqa: F401
+from repro.serving.microbatch import MicroBatchServer, ServedQuery, SlaBudgeter  # noqa: F401

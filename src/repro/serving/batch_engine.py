@@ -1,0 +1,211 @@
+"""Batched anytime query engine (vmapped device traversal).
+
+``BatchEngine`` wraps the single-query ``core.range_daat.Engine`` with a
+batch execution path: plans are snapped to a small ladder of static shapes
+(see ``bucketing``), stacked into one pytree per shape, and traversed by a
+single ``batched_traverse`` dispatch per group. Budgets are **per query** —
+the postings/range caps travel down the vmap lane with the plan, so a heavy
+query exhausts *its* budget while light lanes in the same batch run to safe
+or exhaustive completion. Results are bitwise identical to looping
+``device_traverse`` over the same plans (tests/test_batch_serving.py).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.range_daat import (
+    Engine,
+    QueryPlan,
+    batched_traverse,
+    exit_reason,
+)
+from repro.serving.bucketing import BucketSpec, stack_plans
+
+__all__ = ["BatchResult", "BatchEngine", "INT32_MAX"]
+
+INT32_MAX = 2**31 - 1
+
+
+class BatchResult(NamedTuple):
+    """Host-side per-query outcome of a batched traversal."""
+
+    doc_ids: np.ndarray  # [<=k] int32, score-desc / docid-asc
+    scores: np.ndarray  # [<=k] int32
+    ranges_processed: int
+    postings: int
+    blocks: int
+    exit_safe: bool
+    exit_budget: bool
+
+    @property
+    def exit_reason(self) -> str:
+        return exit_reason(self.exit_safe, self.exit_budget)
+
+
+def _per_query(value, n: int, default: int) -> np.ndarray:
+    """Broadcast a scalar-or-sequence budget to an [n] int32 array."""
+    if value is None:
+        return np.full(n, default, dtype=np.int32)
+    arr = np.asarray(value, dtype=np.int64)
+    if arr.ndim == 0:
+        arr = np.full(n, int(arr), dtype=np.int64)
+    if arr.shape != (n,):
+        raise ValueError(f"budget shape {arr.shape} != ({n},)")
+    return np.clip(arr, 0, INT32_MAX).astype(np.int32)
+
+
+class BatchEngine:
+    """Micro-batch executor over a cluster-skipping index.
+
+    Shape discipline: every dispatch has shape (batch_bucket, R,
+    width_bucket) with R and s_pad fixed by the index, so the XLA program
+    cache is bounded by ``len(width buckets) x len(batch buckets)``.
+    ``compiled_shapes`` records which (batch, width) programs have been
+    requested — tests use it to assert the recompile bound holds.
+    """
+
+    def __init__(self, engine: Engine, spec: BucketSpec | None = None):
+        self.engine = engine
+        self.spec = spec or BucketSpec()
+        self.compiled_shapes: set[tuple[int, int]] = set()
+        self.batches_run = 0
+
+    # ------------------------------------------------------------- planning
+    def plan(self, q_terms: np.ndarray) -> QueryPlan:
+        return self.engine.plan(q_terms)
+
+    def plan_many(self, queries: Sequence[np.ndarray]) -> list[QueryPlan]:
+        return [self.engine.plan(q) for q in queries]
+
+    # ------------------------------------------------------------ execution
+    def run_batch(
+        self,
+        plans: Sequence[QueryPlan],
+        budget_postings=None,
+        max_ranges=None,
+        safe_stop: bool = True,
+        prune_blocks: bool = True,
+    ) -> list[BatchResult]:
+        """Traverse ``plans`` in vmapped groups; results keep input order.
+
+        ``budget_postings`` / ``max_ranges`` may be None (unbounded), a
+        scalar applied to every query, or a length-len(plans) sequence of
+        per-query caps.
+        """
+        n = len(plans)
+        if n == 0:
+            return []
+        budgets = _per_query(budget_postings, n, INT32_MAX)
+        maxr = _per_query(max_ranges, n, INT32_MAX)
+
+        # Group query indices by width bucket; each group dispatches in
+        # chunks of at most max_batch lanes.
+        groups: dict[int, list[int]] = {}
+        for i, p in enumerate(plans):
+            w = self.spec.width_bucket(p.blk_tab.shape[1])
+            groups.setdefault(w, []).append(i)
+
+        results: list[BatchResult | None] = [None] * n
+        for width, idxs in sorted(groups.items()):
+            for lo in range(0, len(idxs), self.spec.max_batch):
+                chunk = idxs[lo : lo + self.spec.max_batch]
+                self._run_chunk(
+                    [plans[i] for i in chunk],
+                    chunk,
+                    width,
+                    budgets,
+                    maxr,
+                    safe_stop,
+                    prune_blocks,
+                    results,
+                )
+        return results  # type: ignore[return-value]
+
+    def _run_chunk(
+        self,
+        chunk_plans: list[QueryPlan],
+        chunk_idx: list[int],
+        width: int,
+        budgets: np.ndarray,
+        maxr: np.ndarray,
+        safe_stop: bool,
+        prune_blocks: bool,
+        results: list,
+    ) -> None:
+        batch = self.spec.batch_bucket(len(chunk_plans))
+        bp = stack_plans(chunk_plans, width, batch)
+
+        # Dummy lanes get zero budgets -> they exit at i=0 having done no work.
+        b = np.zeros(batch, dtype=np.int32)
+        m = np.zeros(batch, dtype=np.int32)
+        b[: len(chunk_idx)] = budgets[chunk_idx]
+        m[: len(chunk_idx)] = maxr[chunk_idx]
+
+        eng = self.engine
+        res = batched_traverse(
+            eng.dix,
+            bp.blk_tab,
+            bp.rest_tab,
+            bp.order,
+            bp.ordered_bounds,
+            jnp.asarray(b),
+            jnp.asarray(m),
+            s_pad=eng.s_pad,
+            k=eng.k,
+            safe_stop=safe_stop,
+            prune_blocks=prune_blocks,
+            impl=eng.impl,
+            interpret=eng.interpret,
+        )
+        self.compiled_shapes.add((batch, width))
+        self.batches_run += 1
+
+        vals = np.asarray(res.state.vals)
+        ids = np.asarray(res.state.ids)
+        postings = np.asarray(res.state.postings)
+        blocks = np.asarray(res.state.blocks)
+        ranges = np.asarray(res.ranges_processed)
+        safe = np.asarray(res.exit_safe)
+        budg = np.asarray(res.exit_budget)
+        for lane, qi in enumerate(chunk_idx):
+            keep = ids[lane] >= 0
+            results[qi] = BatchResult(
+                doc_ids=ids[lane][keep],
+                scores=vals[lane][keep],
+                ranges_processed=int(ranges[lane]),
+                postings=int(postings[lane]),
+                blocks=int(blocks[lane]),
+                exit_safe=bool(safe[lane]),
+                exit_budget=bool(budg[lane]),
+            )
+
+    # ---------------------------------------------------------------- misc
+    def warmup(self, widths: Sequence[int] | None = None) -> None:
+        """Pre-compile every (batch_bucket, width) program for given widths."""
+        R = self.engine.index.n_ranges
+        batches = []
+        b = self.spec.min_batch
+        while b <= self.spec.max_batch:
+            batches.append(b)
+            b *= 2
+        if batches[-1] != self.spec.max_batch:
+            # batch_bucket() clamps to max_batch itself, so a non-power-of-two
+            # max_batch is a reachable shape the ladder would otherwise miss.
+            batches.append(self.spec.max_batch)
+        for w in widths or (self.spec.min_width,):
+            wb = self.spec.width_bucket(w)
+            dummy = QueryPlan(
+                q_terms=np.asarray([-1], np.int32),
+                blk_tab=jnp.full((R, wb), -1, jnp.int32),
+                rest_tab=jnp.zeros((R, wb), jnp.int32),
+                order=jnp.arange(R, dtype=jnp.int32),
+                ordered_bounds=jnp.zeros((R,), jnp.int32),
+                order_host=np.arange(R, dtype=np.int32),
+                bounds_host=np.zeros(R, dtype=np.int64),
+            )
+            for nb in batches:
+                self.run_batch([dummy] * nb)

@@ -1,0 +1,117 @@
+"""Shape bucketing for batched device traversal.
+
+``device_traverse`` is jit-compiled per static shape, so a naive batch path
+would recompile for every distinct (batch, block-table width) pair the query
+stream produces. We instead snap both axes to a small geometric ladder:
+
+  * width buckets — the block-table width B (the ragged per-query axis) is
+    padded up to the next power of two >= ``min_width``. Padding columns are
+    ``-1`` block ids, which the scorer drops before touching memory, so a
+    padded plan is *bitwise* equivalent to the unpadded one.
+  * batch buckets — a group of same-width plans is padded up to the next
+    power of two with inert dummy lanes (``max_ranges = 0`` and
+    ``budget = 0``) whose results are discarded on unstack.
+
+With R (ranges) and s_pad fixed per index, the total number of XLA programs
+the engine can ever compile is #width_buckets x #batch_buckets — typically
+under a dozen — after which serving is allocation + dispatch only.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.range_daat import QueryPlan
+
+__all__ = ["BucketSpec", "BatchedPlan", "bucket_pow2", "stack_plans"]
+
+
+def bucket_pow2(n: int, lo: int = 1, hi: int | None = None) -> int:
+    """Smallest power of two >= n, clamped to [lo, hi]."""
+    v = lo
+    while v < n:
+        v *= 2
+    if hi is not None:
+        v = min(v, hi)
+    return v
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketSpec:
+    """Static-shape ladder for the batch path."""
+
+    min_width: int = 32  # floor for the block-table width bucket
+    max_batch: int = 32  # batch lanes per device program (upper bucket)
+    min_batch: int = 1  # floor for the batch-size bucket
+
+    def __post_init__(self):
+        if self.min_width < 1 or self.max_batch < 1 or self.min_batch < 1:
+            raise ValueError(
+                f"BucketSpec sizes must be >= 1, got min_width={self.min_width} "
+                f"max_batch={self.max_batch} min_batch={self.min_batch}"
+            )
+
+    def width_bucket(self, width: int) -> int:
+        return bucket_pow2(width, lo=self.min_width)
+
+    def batch_bucket(self, n: int) -> int:
+        return bucket_pow2(n, lo=self.min_batch, hi=self.max_batch)
+
+
+class BatchedPlan(NamedTuple):
+    """Stacked, padded pytree of query plans — direct ``batched_traverse`` input."""
+
+    blk_tab: jnp.ndarray  # [N, R, B] int32, -1 padded
+    rest_tab: jnp.ndarray  # [N, R, B] int32
+    order: jnp.ndarray  # [N, R] int32
+    ordered_bounds: jnp.ndarray  # [N, R] int32
+    valid: np.ndarray  # [N] bool host mask — False on dummy pad lanes
+
+
+def _pad_width(tab: np.ndarray, width: int, fill: int) -> np.ndarray:
+    if tab.shape[1] == width:
+        return tab
+    return np.pad(tab, ((0, 0), (0, width - tab.shape[1])), constant_values=fill)
+
+
+def stack_plans(
+    plans: Sequence[QueryPlan], width: int, batch: int
+) -> BatchedPlan:
+    """Stack ``plans`` into one [batch, R, width] pytree with dummy padding.
+
+    Every plan must have block-table width <= ``width`` and the same R.
+    Dummy lanes (indices >= len(plans)) get all ``-1`` block tables and zero
+    bounds; callers must also zero their budgets so they exit immediately.
+    """
+    n = len(plans)
+    if n == 0 or n > batch:
+        raise ValueError(f"need 0 < len(plans)={n} <= batch={batch}")
+    R = plans[0].blk_tab.shape[0]
+
+    blk = np.full((batch, R, width), -1, dtype=np.int32)
+    rest = np.zeros((batch, R, width), dtype=np.int32)
+    order = np.zeros((batch, R), dtype=np.int32)
+    bounds = np.zeros((batch, R), dtype=np.int32)
+    order[:] = np.arange(R, dtype=np.int32)  # dummy lanes: identity order
+
+    for i, p in enumerate(plans):
+        if p.blk_tab.shape[0] != R:
+            raise ValueError("all plans in a batch must share the same R")
+        blk[i] = _pad_width(np.asarray(p.blk_tab, dtype=np.int32), width, -1)
+        rest[i] = _pad_width(np.asarray(p.rest_tab, dtype=np.int32), width, 0)
+        order[i] = p.order_host
+        bounds[i] = np.asarray(p.bounds_host, dtype=np.int32)
+
+    valid = np.zeros(batch, dtype=bool)
+    valid[:n] = True
+    return BatchedPlan(
+        blk_tab=jnp.asarray(blk),
+        rest_tab=jnp.asarray(rest),
+        order=jnp.asarray(order),
+        ordered_bounds=jnp.asarray(bounds),
+        valid=valid,
+    )

@@ -1,0 +1,135 @@
+"""Micro-batching request loop with SLA-derived device budgets.
+
+The host-driven anytime executor (core.anytime) takes its go/no-go decision
+between ranges from a wall clock. The batch path cannot — one device
+dispatch traverses the whole batch — so the SLA must be compiled *into* the
+dispatch as per-query postings budgets (the paper's deterministic JASS-style
+proxy for time). ``SlaBudgeter`` closes the loop:
+
+  * an EWMA of observed postings scored per millisecond per lane converts
+    the millisecond SLA into a postings cap;
+  * a ``core.anytime.Reactive`` policy supplies Eq. (7) multiplicative
+    feedback — its alpha divides the cap, so SLA misses shrink budgets and
+    sustained compliance relaxes them, exactly the paper's §6.4 control
+    loop transplanted from time-space into postings-space.
+
+``MicroBatchServer`` is the request loop: enqueue, cut a batch at
+``max_batch`` (or whatever is pending), serve it through ``BatchEngine``,
+attribute the batch wall time plus queue wait to every member.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.anytime import Reactive
+from repro.core.clustered_index import BLOCK
+from repro.serving.batch_engine import BatchEngine, BatchResult
+
+__all__ = ["SlaBudgeter", "ServedQuery", "MicroBatchServer"]
+
+
+@dataclasses.dataclass
+class SlaBudgeter:
+    """Convert a wall-clock SLA into per-query postings budgets."""
+
+    sla_ms: float
+    policy: Reactive = dataclasses.field(default_factory=lambda: Reactive())
+    rate: float = 100.0  # postings / ms / lane — EWMA, seeded conservatively
+    ema: float = 0.3
+    floor: int = BLOCK  # always admit at least one block per query
+
+    def budgets(self, n: int) -> np.ndarray:
+        """[n] int32 postings budgets for the next batch."""
+        cap = max(float(self.floor), self.rate * self.sla_ms / self.policy.alpha)
+        cap = min(cap, float(2**31 - 1))  # inf SLA -> unbounded traversal
+        return np.full(n, int(cap), dtype=np.int32)
+
+    def observe(self, elapsed_ms: float, total_postings: int, n: int) -> None:
+        """Feed back one served batch: throughput EWMA + Eq. (7) on alpha."""
+        if elapsed_ms > 0 and n > 0:
+            lane_rate = (total_postings / n) / elapsed_ms
+            self.rate = (1 - self.ema) * self.rate + self.ema * max(lane_rate, 1e-6)
+        self.policy.on_query_end(elapsed_ms, self.sla_ms)
+
+
+@dataclasses.dataclass
+class ServedQuery:
+    rid: int
+    result: BatchResult
+    latency_ms: float  # queue wait + batch service time
+    batch_size: int
+
+
+class MicroBatchServer:
+    """Queue + cut + dispatch loop over a ``BatchEngine``."""
+
+    def __init__(
+        self,
+        bengine: BatchEngine,
+        budgeter: SlaBudgeter,
+        max_batch: int | None = None,
+        clock=time.perf_counter,
+    ):
+        self.bengine = bengine
+        self.budgeter = budgeter
+        self.max_batch = max_batch or bengine.spec.max_batch
+        self.clock = clock
+        self._queue: list[tuple[int, np.ndarray, float]] = []
+        self._next_rid = 0
+
+    def submit(self, q_terms: np.ndarray) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append((rid, np.asarray(q_terms), self.clock()))
+        return rid
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def drain_once(self) -> list[ServedQuery]:
+        """Serve one micro-batch from the head of the queue."""
+        if not self._queue:
+            return []
+        cut, self._queue = self._queue[: self.max_batch], self._queue[self.max_batch :]
+        rids = [c[0] for c in cut]
+        enq = [c[2] for c in cut]
+        plans = self.bengine.plan_many([c[1] for c in cut])
+        budgets = self.budgeter.budgets(len(plans))
+
+        t0 = self.clock()
+        results = self.bengine.run_batch(plans, budget_postings=budgets)
+        served_at = self.clock()
+        batch_ms = (served_at - t0) * 1e3
+
+        self.budgeter.observe(
+            batch_ms, sum(r.postings for r in results), len(results)
+        )
+        return [
+            ServedQuery(
+                rid=rid,
+                result=res,
+                latency_ms=(served_at - t_enq) * 1e3,
+                batch_size=len(cut),
+            )
+            for rid, t_enq, res in zip(rids, enq, results)
+        ]
+
+    def replay(
+        self, queries: Sequence[np.ndarray], batch_size: int | None = None
+    ) -> list[ServedQuery]:
+        """Offline replay of a query log in fixed-size micro-batches."""
+        bs = max(1, min(batch_size or self.max_batch, self.max_batch))
+        out: list[ServedQuery] = []
+        for lo in range(0, len(queries), bs):
+            for q in queries[lo : lo + bs]:
+                self.submit(q)
+            out.extend(self.drain_once())
+        while self._queue:
+            out.extend(self.drain_once())
+        return out

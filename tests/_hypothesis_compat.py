@@ -1,0 +1,127 @@
+"""Fallback shim so property tests collect and run without hypothesis.
+
+When hypothesis is installed, this module re-exports the real ``given``,
+``settings`` and ``strategies`` untouched. When it is absent (the minimal
+container image), ``@given`` degrades to a fixed-seed example sweep: each
+declared strategy is sampled from a deterministic ``numpy`` RNG seeded by
+the test name, and the test body runs once per example. This keeps the
+properties exercised everywhere — with real shrinking/coverage whenever
+hypothesis is available — instead of erroring at collection time.
+
+Only the strategy surface the test suite uses is implemented
+(``integers``, ``sampled_from``, ``booleans``, ``floats``); extend it here
+if a test needs more.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - trivially one branch per environment
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import hashlib
+    import inspect
+    import os
+
+    import numpy as np
+
+    # Cap the fallback sweep so interpret-mode kernel properties stay quick;
+    # override with REPRO_COMPAT_MAX_EXAMPLES=0 to honor the declared count.
+    _MAX_EXAMPLES_CAP = int(os.environ.get("REPRO_COMPAT_MAX_EXAMPLES", "6")) or None
+
+    class _Strategy:
+        def sample(self, rng: np.random.Generator):
+            raise NotImplementedError
+
+    class _Integers(_Strategy):
+        def __init__(self, min_value: int, max_value: int):
+            self.lo, self.hi = int(min_value), int(max_value)
+
+        def sample(self, rng):
+            return int(rng.integers(self.lo, self.hi + 1))
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, elements):
+            self.elements = list(elements)
+
+        def sample(self, rng):
+            return self.elements[int(rng.integers(0, len(self.elements)))]
+
+    class _Booleans(_Strategy):
+        def sample(self, rng):
+            return bool(rng.integers(0, 2))
+
+    class _Floats(_Strategy):
+        def __init__(self, min_value=0.0, max_value=1.0, **_kw):
+            self.lo, self.hi = float(min_value), float(max_value)
+
+        def sample(self, rng):
+            return float(rng.uniform(self.lo, self.hi))
+
+    class _StrategiesModule:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(elements) -> _Strategy:
+            return _SampledFrom(elements)
+
+        @staticmethod
+        def booleans() -> _Strategy:
+            return _Booleans()
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **kw) -> _Strategy:
+            return _Floats(min_value, max_value, **kw)
+
+    st = strategies = _StrategiesModule()
+
+    def settings(max_examples: int = 10, **_ignored):
+        """Record the example count on the (already-wrapped) test."""
+
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strats):
+        """Run the test once per deterministically-sampled example."""
+
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                declared = getattr(wrapper, "_compat_max_examples", 10)
+                n = declared if _MAX_EXAMPLES_CAP is None else min(
+                    declared, _MAX_EXAMPLES_CAP
+                )
+                seed = int.from_bytes(
+                    hashlib.sha1(fn.__qualname__.encode()).digest()[:4], "little"
+                )
+                rng = np.random.default_rng(seed)
+                for _ in range(n):
+                    drawn = {k: s.sample(rng) for k, s in strats.items()}
+                    fn(*args, **drawn, **kwargs)
+
+            # Hide the drawn params from pytest's fixture resolution (any
+            # remaining params still resolve as fixtures, like hypothesis).
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(
+                parameters=[
+                    p for name, p in sig.parameters.items() if name not in strats
+                ]
+            )
+            del wrapper.__dict__["__wrapped__"]
+            return wrapper
+
+        return deco
+
+
+strategies = st
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st", "strategies"]

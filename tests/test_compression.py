@@ -2,6 +2,7 @@
 
 from __future__ import annotations
 
+import os
 import subprocess
 import sys
 
@@ -9,6 +10,9 @@ import numpy as np
 import pytest
 
 from repro.optim.compression import _dequantize, _quantize
+
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def test_quantize_roundtrip_error_bounded():
@@ -66,7 +70,8 @@ def test_compressed_pod_reduction_matches_mean():
     out = subprocess.run(
         [sys.executable, "-c", _SUBPROC],
         capture_output=True, text=True,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
-        cwd="/root/repo", timeout=600,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu"},
+        cwd=_REPO_ROOT, timeout=600,
     )
     assert "COMPRESSION_OK" in out.stdout, out.stdout[-1500:] + out.stderr[-2500:]

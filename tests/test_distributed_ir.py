@@ -6,6 +6,7 @@ The multi-device variant runs in a subprocess with 8 forced host devices
 
 from __future__ import annotations
 
+import os
 import subprocess
 import sys
 
@@ -13,6 +14,9 @@ import numpy as np
 import pytest
 
 from repro.core.oracle import exhaustive_topk
+
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 _SUBPROC = r"""
 import os
@@ -56,8 +60,9 @@ def test_sharded_query_matches_merged_oracles():
         [sys.executable, "-c", _SUBPROC],
         capture_output=True,
         text=True,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
-        cwd="/root/repo",
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu"},
+        cwd=_REPO_ROOT,
         timeout=900,
     )
     assert "SHARDED_OK 8" in out.stdout, out.stdout + out.stderr

@@ -6,10 +6,13 @@ sharded programs *compute the same thing* (8-device subprocess meshes).
 
 from __future__ import annotations
 
+import os
 import subprocess
 import sys
 
 import pytest
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 _MOE = r"""
 import os
@@ -98,8 +101,9 @@ def _run(code: str, marker: str, timeout=900):
     out = subprocess.run(
         [sys.executable, "-c", code],
         capture_output=True, text=True,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
-        cwd="/root/repo", timeout=timeout,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu"},
+        cwd=_REPO_ROOT, timeout=timeout,
     )
     assert marker in out.stdout, out.stdout[-1500:] + out.stderr[-2500:]
 

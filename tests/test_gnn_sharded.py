@@ -2,10 +2,14 @@
 
 from __future__ import annotations
 
+import os
 import subprocess
 import sys
 
 import pytest
+
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 _SUBPROC = r"""
 import os
@@ -59,7 +63,8 @@ def test_sharded_sage_matches_baseline():
     out = subprocess.run(
         [sys.executable, "-c", _SUBPROC],
         capture_output=True, text=True,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
-        cwd="/root/repo", timeout=900,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu"},
+        cwd=_REPO_ROOT, timeout=900,
     )
     assert "GNN_SHARDED_OK" in out.stdout, out.stdout[-1500:] + out.stderr[-2500:]

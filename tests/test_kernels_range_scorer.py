@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.range_scorer import ref
 from repro.kernels.range_scorer.kernel import scatter_accumulate_pallas

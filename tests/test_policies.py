@@ -56,3 +56,52 @@ def test_fixed_policy():
     assert p.decide(1e9, 4, 0.0)
     assert not p.decide(0.0, 5, 1e9)
     assert p.name == "Fixed-5"
+
+
+def test_reactive_clamps_at_alpha_min():
+    p = Reactive(alpha=0.2, beta=2.0, q=1.0, alpha_min=0.1, alpha_max=64.0)
+    for _ in range(20):
+        p.on_query_end(1.0, 100.0)  # easy hits drive alpha down...
+    assert np.isclose(p.alpha, p.alpha_min)  # ...onto the floor, not past it
+    p.on_query_end(1.0, 100.0)
+    assert p.alpha >= p.alpha_min
+
+
+def test_reactive_clamps_at_alpha_max():
+    p = Reactive(alpha=32.0, beta=2.0, q=0.01, alpha_min=0.1, alpha_max=64.0)
+    for _ in range(10):
+        p.on_query_end(200.0, 50.0)  # misses drive alpha up
+    assert np.isclose(p.alpha, p.alpha_max)
+    assert all(a <= p.alpha_max for a in p.trace)
+
+
+def test_undershoot_never_exceeds_budget():
+    """Eq. 4 invariant: a query governed by Undershoot finishes within
+    budget for ANY range-time sequence bounded by t_max — simulated
+    independently of decide()'s formula."""
+    t_max = 7.0
+    rng = np.random.default_rng(0)
+    for trial in range(200):
+        p = Undershoot(t_max_ms=t_max)
+        budget = float(rng.uniform(1.0, 100.0))
+        t = 0.0
+        for i in range(100):
+            if not p.decide(t, i, budget):
+                break
+            # Adversarial worst case: the admitted range takes exactly t_max.
+            t += t_max
+        assert t <= budget, (trial, t, budget)  # never violates the SLA
+    assert not p.decide(10.0, 3, 10.0 + t_max)  # boundary: not strict-less
+
+
+def test_fixed_n_processes_exactly_min_n_R(engine, queries):
+    from repro.core.anytime import run_query_anytime
+
+    R = engine.index.n_ranges
+    for n in (0, 2, R, R + 5):
+        plan = engine.plan(queries[0])
+        res = run_query_anytime(
+            engine, plan, policy=Fixed(n), budget_ms=1e9, safe_stop=False
+        )
+        assert res.ranges_processed == min(n, R)
+        assert res.exit_reason == ("policy" if n < R else "exhausted")

@@ -12,7 +12,7 @@ correctness rests on:
 from __future__ import annotations
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.clustered_index import build_index
 from repro.core.oracle import exhaustive_scores, exhaustive_topk

@@ -8,10 +8,14 @@ model) against the batch-sharded baseline, in fp32.
 
 from __future__ import annotations
 
+import os
 import subprocess
 import sys
 
 import pytest
+
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 _SUBPROC = r"""
 import os
@@ -108,7 +112,8 @@ def test_splitkv_decode_matches_baseline():
     out = subprocess.run(
         [sys.executable, "-c", _SUBPROC],
         capture_output=True, text=True,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
-        cwd="/root/repo", timeout=1200,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu"},
+        cwd=_REPO_ROOT, timeout=1200,
     )
     assert "SPLITKV_ALL_OK" in out.stdout, out.stdout[-2000:] + out.stderr[-3000:]
