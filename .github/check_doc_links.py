@@ -1,0 +1,92 @@
+#!/usr/bin/env python3
+"""Docs cross-reference check (CI gate; no third-party deps).
+
+Fails (exit 1) when:
+
+  * any ``DESIGN.md §N`` citation — in ``src/``, ``benchmarks/``,
+    ``tests/``, ``examples/`` Python sources or any ``*.md`` — names a
+    section that does not exist as a ``## §N`` heading in DESIGN.md, or
+    DESIGN.md itself is missing;
+  * any relative markdown link ``[text](path)`` in a ``*.md`` file points
+    at a file that does not exist (http(s)/mailto/pure-anchor links are
+    ignored; ``SNIPPETS.md`` is exempt — it quotes external repos).
+
+Run locally:  python .github/check_doc_links.py
+Also enforced by tests/test_docs_links.py so tier-1 catches it pre-push.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+PY_DIRS = ("src", "benchmarks", "tests", "examples")
+SKIP_MD = {"SNIPPETS.md"}  # quotes other repos; its links are not ours
+EXTERNAL = ("http://", "https://", "mailto:")
+
+# "DESIGN.md §2", "DESIGN.md §3-§4" — capture the trailing §-list.
+DESIGN_REF = re.compile(r"DESIGN\.md((?:\s*[-–]?\s*§\d+)*)")
+SECTION = re.compile(r"§(\d+)")
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING = re.compile(r"^##\s*§(\d+)\b", re.MULTILINE)
+
+
+def design_sections() -> set[str]:
+    design = ROOT / "DESIGN.md"
+    if not design.exists():
+        print("FAIL: DESIGN.md does not exist")
+        sys.exit(1)
+    return set(HEADING.findall(design.read_text(encoding="utf-8")))
+
+
+def iter_files():
+    for d in PY_DIRS:
+        yield from sorted((ROOT / d).rglob("*.py"))
+    for p in sorted(ROOT.rglob("*.md")):
+        if ".git" not in p.parts and ".cache" not in p.parts:
+            yield p
+
+
+def main() -> int:
+    sections = design_sections()
+    errors: list[str] = []
+
+    for path in iter_files():
+        rel = path.relative_to(ROOT)
+        text = path.read_text(encoding="utf-8", errors="replace")
+
+        for m in DESIGN_REF.finditer(text):
+            for sec in SECTION.findall(m.group(1)):
+                if sec not in sections:
+                    line = text[: m.start()].count("\n") + 1
+                    errors.append(
+                        f"{rel}:{line}: cites DESIGN.md §{sec} but DESIGN.md "
+                        f"has only §{{{', '.join(sorted(sections, key=int))}}}"
+                    )
+
+        if path.suffix == ".md" and path.name not in SKIP_MD:
+            for m in MD_LINK.finditer(text):
+                target = m.group(1)
+                if target.startswith(EXTERNAL) or target.startswith("#"):
+                    continue
+                rel_target = target.split("#", 1)[0]
+                if not rel_target:
+                    continue
+                if not (path.parent / rel_target).exists():
+                    line = text[: m.start()].count("\n") + 1
+                    errors.append(f"{rel}:{line}: broken link -> {target}")
+
+    if errors:
+        print(f"FAIL: {len(errors)} broken doc reference(s)")
+        for e in errors:
+            print("  " + e)
+        return 1
+    print(f"OK: all DESIGN.md § citations resolve (sections: "
+          f"§{', §'.join(sorted(sections, key=int))}) and markdown links exist")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

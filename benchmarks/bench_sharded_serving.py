@@ -1,0 +1,119 @@
+"""Range-sharded serving: queries/sec and per-query P99 for 1/2/4 shards.
+
+Compares, over the same index and query log:
+
+  * ``batch-1shard``  — the unsharded ``BatchEngine`` (PR 1 baseline);
+  * ``sharded-S``     — ``ShardedBatchEngine`` at S in {1, 2, 4} range
+                        shards, one (batch x shard) dispatch per micro-batch.
+
+Execution path is reported per row: ``shard_map mesh`` when the runtime
+exposes >= S devices (run standalone with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` for a forced CPU
+mesh), else the single-device ``vmap`` fallback — on 1 CPU core the vmap
+rows measure sharding *overhead* (same math, extra lanes), which is the
+honest number this container can produce; mesh rows measure the speedup.
+
+A budgeted variant shows the anytime knob under sharding: the global
+postings budget is split across shards proportionally to postings mass.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+# Standalone invocation: force a 4-device CPU mesh before jax initializes.
+if __name__ == "__main__" and "--mesh" in sys.argv and "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+
+SHARDS = (1, 2, 4)
+BATCH = 32
+BUDGET = 20_000  # global postings budget for the budgeted rows
+
+
+def _row(name, shards, path, times_ms, wall_s, n, budget="unlimited"):
+    return {
+        "bench": "sharded_serving",
+        "engine": name,
+        "shards": shards,
+        "path": path,
+        "batch": BATCH,
+        "budget": budget,
+        "qps": round(n / wall_s, 2),
+        **{k + "_ms": round(v, 3) for k, v in common.percentiles(times_ms).items()},
+    }
+
+
+def _serve(beng, plans, budget=None):
+    times, t0 = [], time.perf_counter()
+    for lo in range(0, len(plans), BATCH):
+        chunk = plans[lo : lo + BATCH]
+        b = None if budget is None else np.full(len(chunk), budget)
+        t1 = time.perf_counter()
+        beng.run_batch(chunk, budget_postings=b)
+        ms = (time.perf_counter() - t1) * 1e3
+        times.extend([ms] * len(chunk))  # every member waits for the batch
+    return times, time.perf_counter() - t0
+
+
+def run(small: bool = False):
+    import jax
+
+    from repro.serving import BatchEngine, BucketSpec, ShardedBatchEngine, ShardedEngine
+
+    if small:
+        from repro.data.synth import make_corpus, make_query_log
+
+        corpus = make_corpus(n_docs=4000, n_terms=3000, n_topics=8,
+                             mean_doc_len=80, seed=0)
+        ql = make_query_log(corpus, n_queries=64, seed=7)
+        idx = common.build_index_cached(
+            corpus, cache_dir=common.CACHE, n_ranges=8, strategy="clustered",
+        )
+    else:
+        corpus = common.bench_corpus()
+        ql = common.bench_queries(corpus, n=96, seed=7)
+        idx = common.bench_index(corpus, "clustered_bp")
+    eng = common.make_engine(idx, k=10)
+    queries = [ql.terms[i] for i in range(ql.n_queries)]
+    n = len(queries)
+    plans = [eng.plan(q) for q in queries]
+    widths = sorted({BucketSpec().width_bucket(p.blk_tab.shape[1]) for p in plans})
+
+    rows = []
+
+    # Unsharded batch baseline (the engine sharding must not regress).
+    beng = BatchEngine(eng, BucketSpec(max_batch=BATCH))
+    beng.warmup(widths)
+    times, wall = _serve(beng, plans)
+    rows.append(_row("batch-1shard", 1, "vmap", times, wall, n))
+
+    for s in SHARDS:
+        if s > idx.n_ranges:
+            continue
+        se = ShardedEngine(eng, s, use_mesh=None if jax.device_count() >= s else False)
+        path = "shard_map mesh" if se.mesh is not None else "vmap"
+        sbeng = ShardedBatchEngine(se, BucketSpec(max_batch=BATCH))
+        sbeng.warmup(widths)
+        for budget, label in ((None, "unlimited"), (BUDGET, str(BUDGET))):
+            times, wall = _serve(sbeng, plans, budget)
+            r = _row(f"sharded-{s}", s, path, times, wall, n, budget=label)
+            r["shard_mass"] = se.mass.tolist()
+            rows.append(r)
+
+    base_qps = rows[0]["qps"]
+    for r in rows:
+        r["speedup_vs_batch"] = round(r["qps"] / base_qps, 2)
+    common.save_result("sharded_serving", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run(small="--small" in sys.argv):
+        print(row)

@@ -24,6 +24,7 @@ MODULES = [
     ("T7_partitions", "benchmarks.bench_partitions"),
     ("F11_scaling", "benchmarks.bench_scaling"),
     ("S1_batch_serving", "benchmarks.bench_batch_serving"),
+    ("S2_sharded_serving", "benchmarks.bench_sharded_serving"),
     ("T8_failures", "benchmarks.bench_failures"),
     ("Q_quantization", "benchmarks.bench_quantization"),
 ]
@@ -77,6 +78,16 @@ def _headline(name: str, rows) -> tuple[float, str]:
             return (
                 1e6 / max(r["qps"], 1e-9),
                 f"qps_b32={r['qps']}_speedup={r['speedup_vs_seq_host']}x",
+            )
+        if name == "S2_sharded_serving":
+            r = next(
+                x for x in rows if x["engine"] == "sharded-4"
+                and x["budget"] == "unlimited"
+            )
+            return (
+                1e6 / max(r["qps"], 1e-9),
+                f"qps_4shard={r['qps']}_path={r['path'].split()[0]}"
+                f"_vs_batch={r['speedup_vs_batch']}x",
             )
         if name == "Q_quantization":
             r8 = next(x for x in rows if x["bits"] == 8)

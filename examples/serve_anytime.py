@@ -8,13 +8,19 @@ Two engines over the same cluster-skipping index:
   * ``--mode batch`` — the production path: a micro-batching request loop
     over the vmapped ``BatchEngine``. The SLA cannot be polled mid-dispatch,
     so ``SlaBudgeter`` compiles it into per-query postings budgets (EWMA
-    throughput x Reactive alpha, see repro/serving/README.md).
+    throughput x Reactive alpha, see repro/serving/README.md);
+  * ``--mode sharded`` — the batch loop over a range-sharded index
+    (``--shards`` devices, DESIGN.md §4): one (batch x shard) dispatch per
+    micro-batch, ``ShardedSlaBudgeter`` splitting the SLA into per-shard
+    postings budgets. Falls back to the single-device vmap path when the
+    runtime exposes fewer devices than shards (set
+    XLA_FLAGS=--xla_force_host_platform_device_count=N for a CPU mesh).
 
-Both report percentile latencies, queries/sec, SLA compliance, and
+All report percentile latencies, queries/sec, SLA compliance, and
 effectiveness (RBO vs exhaustive).
 
-    PYTHONPATH=src python examples/serve_anytime.py [--mode host|batch]
-        [--sla-ms 15] [--queries 300] [--batch-size 16]
+    PYTHONPATH=src python examples/serve_anytime.py [--mode host|batch|sharded]
+        [--sla-ms 15] [--queries 300] [--batch-size 16] [--shards 2]
 """
 
 import argparse
@@ -27,7 +33,15 @@ from repro.core.anytime import Reactive, run_query_anytime
 from repro.core.metrics import rbo
 from repro.core.oracle import exhaustive_topk
 from repro.data.synth import make_corpus, make_query_log
-from repro.serving import BatchEngine, BucketSpec, MicroBatchServer, SlaBudgeter
+from repro.serving import (
+    BatchEngine,
+    BucketSpec,
+    MicroBatchServer,
+    ShardedBatchEngine,
+    ShardedEngine,
+    ShardedSlaBudgeter,
+    SlaBudgeter,
+)
 
 
 def build(args):
@@ -82,8 +96,19 @@ def serve_host(engine, log, sla_arg, oracle, exh_p99):
            extra=f"   final alpha = {policy.alpha:.2f}")
 
 
-def serve_batch(engine, log, sla_arg, oracle, batch_size, rate0, exh_p99):
-    beng = BatchEngine(engine, BucketSpec(max_batch=batch_size))
+def serve_batch(engine, log, sla_arg, oracle, batch_size, rate0, exh_p99,
+                n_shards=None):
+    spec = BucketSpec(max_batch=batch_size)
+    if n_shards:
+        seng = ShardedEngine(engine, n_shards)
+        beng = ShardedBatchEngine(seng, spec)
+        path = "shard_map mesh" if seng.mesh is not None else "vmap (1 device)"
+        print(f"sharded: {seng.n_shards} range shards, {path}, "
+              f"mass={seng.mass.tolist()}")
+        mk_budgeter = lambda **kw: ShardedSlaBudgeter(n_shards=seng.n_shards, **kw)
+    else:
+        beng = BatchEngine(engine, spec)
+        mk_budgeter = SlaBudgeter
     # Pre-compile every (batch_bucket, width) program the whole log can
     # produce before any timing (planning is host-side and cheap).
     widths = {beng.spec.width_bucket(engine.plan(log.terms[i]).blk_tab.shape[1])
@@ -95,7 +120,7 @@ def serve_batch(engine, log, sla_arg, oracle, batch_size, rate0, exh_p99):
     # distribution understates what one dispatch costs.
     probe_n = min(4 * batch_size, log.n_queries)
     probe = MicroBatchServer(
-        beng, SlaBudgeter(sla_ms=float("inf"), rate=rate0), max_batch=batch_size
+        beng, mk_budgeter(sla_ms=float("inf"), rate=rate0), max_batch=batch_size
     )
     lat = [s.latency_ms for s in
            probe.replay([log.terms[i] for i in range(probe_n)],
@@ -105,7 +130,7 @@ def serve_batch(engine, log, sla_arg, oracle, batch_size, rate0, exh_p99):
           f"{np.percentile(lat, 99):.2f} ms; host exhaustive P99 "
           f"{exh_p99:.2f} ms)")
 
-    budgeter = SlaBudgeter(
+    budgeter = mk_budgeter(
         sla_ms=sla, policy=Reactive(alpha=1.0, beta=1.5, q=0.01), rate=rate0
     )
     server = MicroBatchServer(beng, budgeter, max_batch=batch_size)
@@ -134,7 +159,10 @@ def serve_batch(engine, log, sla_arg, oracle, batch_size, rate0, exh_p99):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=("host", "batch"), default="batch")
+    ap.add_argument("--mode", choices=("host", "batch", "sharded"),
+                    default="batch")
+    ap.add_argument("--shards", type=int, default=2,
+                    help="range shards for --mode sharded")
     ap.add_argument("--sla-ms", type=float, default=None,
                     help="P99 budget; default: host mode = 25%% of the "
                          "host-driven exhaustive P99, batch mode = 50%% of "
@@ -150,7 +178,8 @@ def main():
         serve_host(engine, log, args.sla_ms, oracle, exh_p99)
     else:
         serve_batch(engine, log, args.sla_ms, oracle, args.batch_size,
-                    rate0, exh_p99)
+                    rate0, exh_p99,
+                    n_shards=args.shards if args.mode == "sharded" else None)
 
 
 if __name__ == "__main__":

@@ -97,7 +97,7 @@ _LM_SHAPES = {
         "decode",
         "seq 524288, batch 1",
         skip="pure full-attention arch: O(n^2) softmax attention; sub-quadratic "
-        "attention required for 500k decode (DESIGN.md §4)",
+        "attention required for 500k decode (DESIGN.md §5)",
     ),
 }
 

@@ -35,6 +35,7 @@ __all__ = [
     "QueryPlan",
     "Engine",
     "init_state",
+    "merge_topk",
     "score_range_step",
     "device_traverse",
     "batched_traverse",
@@ -88,17 +89,29 @@ def _merge_topk(
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Deterministic top-k merge: higher score first, then smaller docid.
 
-    A stable lexsort over (score desc, docid asc) makes tie-breaking
-    identical to the host oracle, so safe traversals reproduce the oracle
-    ranking *exactly*, not merely as a score multiset. Sorting 2k int32
-    elements is cheap (k <= 1000) and stays in int32 for the TPU target.
+    The (score desc, docid asc) total order makes tie-breaking identical to
+    the host oracle, so safe traversals reproduce the oracle ranking
+    *exactly*, not merely as a score multiset. Sorting 2k int32 elements is
+    cheap (k <= 1000) and stays in int32 for the TPU target. Delegates to
+    ``merge_topk`` so the comparator is structurally shared with the
+    sharded broker merge — the bitwise-parity contract of DESIGN.md §4.
     """
-    v = jnp.concatenate([vals_a, vals_b])
-    i = jnp.concatenate([ids_a, ids_b])
-    i_key = jnp.where(i >= 0, i, jnp.iinfo(jnp.int32).max)  # empties last
-    order = jnp.lexsort((i_key, -v))
-    sel = order[:k]
-    return v[sel], i[sel]
+    return merge_topk(
+        jnp.concatenate([vals_a, vals_b]), jnp.concatenate([ids_a, ids_b]), k
+    )
+
+
+def merge_topk(vals: jnp.ndarray, ids: jnp.ndarray, k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k of flat (vals, ids) candidates under the heap's total order.
+
+    Identical comparator to ``_merge_topk`` — score descending, docid
+    ascending, empty slots (id < 0) last — so any grouping of candidates
+    (incremental per-range merges on one device, or per-shard heaps merged
+    by a broker) yields the same k winners bit-for-bit (DESIGN.md §4).
+    """
+    i_key = jnp.where(ids >= 0, ids, jnp.iinfo(jnp.int32).max)
+    sel = jnp.lexsort((i_key, -vals))[:k]
+    return vals[sel], ids[sel]
 
 
 @functools.partial(

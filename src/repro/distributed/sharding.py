@@ -5,10 +5,37 @@ from __future__ import annotations
 import dataclasses
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-__all__ = ["ShardCtx", "named", "data_spec", "shard_map", "axis_size"]
+__all__ = [
+    "ShardCtx",
+    "named",
+    "data_spec",
+    "shard_map",
+    "axis_size",
+    "retrieval_mesh",
+]
+
+
+def retrieval_mesh(n_shards: int, axis: str = "shard") -> Mesh:
+    """1-D mesh for range-sharded retrieval (DESIGN.md §4).
+
+    One mesh axis carrying index shards; raises if the runtime exposes fewer
+    devices than shards (tests force CPU host devices via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+    """
+    n_dev = jax.device_count()
+    if n_dev < n_shards:
+        raise ValueError(
+            f"retrieval_mesh needs {n_shards} devices, have {n_dev}; "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count before "
+            "importing jax, or use the single-device vmap path"
+        )
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh((n_shards,), (axis,))
+    return Mesh(np.asarray(jax.devices()[:n_shards]), (axis,))
 
 
 def axis_size(name):

@@ -3,7 +3,9 @@
 The paper's deployment story (§1, §7): a collection too large for one node is
 partitioned across index server nodes; every query runs on all partitions and
 a broker merges per-node top-k lists. Here that maps onto one device mesh
-(DESIGN.md §2):
+(DESIGN.md §4-§5; serving/sharded.py is the range-partitioned sibling that
+shards one index at range boundaries instead of building per-node
+sub-indexes from a random document split):
 
   * the corpus is split into M = |model| shards, each a self-contained
     cluster-skipping sub-index (its own ranges, bounds, local docid space);

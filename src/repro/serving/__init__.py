@@ -1,5 +1,18 @@
 # Batched anytime serving: shape-bucketed, vmapped device traversal with
-# per-query budgets, plus the SLA-governed micro-batching request loop.
+# per-query budgets, the SLA-governed micro-batching request loop, and the
+# range-sharded multi-device engine (DESIGN.md §3-§4).
 from repro.serving.batch_engine import BatchEngine, BatchResult, INT32_MAX  # noqa: F401
 from repro.serving.bucketing import BatchedPlan, BucketSpec, bucket_pow2, stack_plans  # noqa: F401
-from repro.serving.microbatch import MicroBatchServer, ServedQuery, SlaBudgeter  # noqa: F401
+from repro.serving.microbatch import (  # noqa: F401
+    MicroBatchServer,
+    ServedQuery,
+    ShardedSlaBudgeter,
+    SlaBudgeter,
+)
+from repro.serving.sharded import (  # noqa: F401
+    ShardedBatchEngine,
+    ShardedEngine,
+    ShardedResult,
+    shard_exit_reason,
+    sharded_batched_traverse,
+)

@@ -23,7 +23,13 @@ from repro.core.range_daat import (
     batched_traverse,
     exit_reason,
 )
-from repro.serving.bucketing import BucketSpec, stack_plans
+from repro.serving.bucketing import (
+    BucketSpec,
+    batch_ladder,
+    dummy_plan,
+    iter_bucket_chunks,
+    stack_plans,
+)
 
 __all__ = ["BatchResult", "BatchEngine", "INT32_MAX"]
 
@@ -102,27 +108,18 @@ class BatchEngine:
         budgets = _per_query(budget_postings, n, INT32_MAX)
         maxr = _per_query(max_ranges, n, INT32_MAX)
 
-        # Group query indices by width bucket; each group dispatches in
-        # chunks of at most max_batch lanes.
-        groups: dict[int, list[int]] = {}
-        for i, p in enumerate(plans):
-            w = self.spec.width_bucket(p.blk_tab.shape[1])
-            groups.setdefault(w, []).append(i)
-
         results: list[BatchResult | None] = [None] * n
-        for width, idxs in sorted(groups.items()):
-            for lo in range(0, len(idxs), self.spec.max_batch):
-                chunk = idxs[lo : lo + self.spec.max_batch]
-                self._run_chunk(
-                    [plans[i] for i in chunk],
-                    chunk,
-                    width,
-                    budgets,
-                    maxr,
-                    safe_stop,
-                    prune_blocks,
-                    results,
-                )
+        for width, chunk in iter_bucket_chunks(plans, self.spec):
+            self._run_chunk(
+                [plans[i] for i in chunk],
+                chunk,
+                width,
+                budgets,
+                maxr,
+                safe_stop,
+                prune_blocks,
+                results,
+            )
         return results  # type: ignore[return-value]
 
     def _run_chunk(
@@ -187,25 +184,7 @@ class BatchEngine:
     def warmup(self, widths: Sequence[int] | None = None) -> None:
         """Pre-compile every (batch_bucket, width) program for given widths."""
         R = self.engine.index.n_ranges
-        batches = []
-        b = self.spec.min_batch
-        while b <= self.spec.max_batch:
-            batches.append(b)
-            b *= 2
-        if batches[-1] != self.spec.max_batch:
-            # batch_bucket() clamps to max_batch itself, so a non-power-of-two
-            # max_batch is a reachable shape the ladder would otherwise miss.
-            batches.append(self.spec.max_batch)
         for w in widths or (self.spec.min_width,):
-            wb = self.spec.width_bucket(w)
-            dummy = QueryPlan(
-                q_terms=np.asarray([-1], np.int32),
-                blk_tab=jnp.full((R, wb), -1, jnp.int32),
-                rest_tab=jnp.zeros((R, wb), jnp.int32),
-                order=jnp.arange(R, dtype=jnp.int32),
-                ordered_bounds=jnp.zeros((R,), jnp.int32),
-                order_host=np.arange(R, dtype=np.int32),
-                bounds_host=np.zeros(R, dtype=np.int64),
-            )
-            for nb in batches:
+            dummy = dummy_plan(R, self.spec.width_bucket(w))
+            for nb in batch_ladder(self.spec):
                 self.run_batch([dummy] * nb)

@@ -27,7 +27,15 @@ import numpy as np
 
 from repro.core.range_daat import QueryPlan
 
-__all__ = ["BucketSpec", "BatchedPlan", "bucket_pow2", "stack_plans"]
+__all__ = [
+    "BucketSpec",
+    "BatchedPlan",
+    "batch_ladder",
+    "bucket_pow2",
+    "dummy_plan",
+    "iter_bucket_chunks",
+    "stack_plans",
+]
 
 
 def bucket_pow2(n: int, lo: int = 1, hi: int | None = None) -> int:
@@ -54,12 +62,57 @@ class BucketSpec:
                 f"BucketSpec sizes must be >= 1, got min_width={self.min_width} "
                 f"max_batch={self.max_batch} min_batch={self.min_batch}"
             )
+        if self.min_batch > self.max_batch:
+            raise ValueError(
+                f"min_batch={self.min_batch} > max_batch={self.max_batch}"
+            )
 
     def width_bucket(self, width: int) -> int:
         return bucket_pow2(width, lo=self.min_width)
 
     def batch_bucket(self, n: int) -> int:
         return bucket_pow2(n, lo=self.min_batch, hi=self.max_batch)
+
+
+def iter_bucket_chunks(plans: Sequence[QueryPlan], spec: BucketSpec):
+    """Group plan indices by width bucket, chunked to ``max_batch`` lanes.
+
+    Yields ``(width_bucket, [plan indices])`` in deterministic (width, then
+    arrival) order — the shared dispatch-grouping loop of the batch engines.
+    """
+    groups: dict[int, list[int]] = {}
+    for i, p in enumerate(plans):
+        groups.setdefault(spec.width_bucket(p.blk_tab.shape[1]), []).append(i)
+    for width, idxs in sorted(groups.items()):
+        for lo in range(0, len(idxs), spec.max_batch):
+            yield width, idxs[lo : lo + spec.max_batch]
+
+
+def batch_ladder(spec: BucketSpec) -> list[int]:
+    """Every reachable batch bucket: powers of two from ``min_batch``, plus
+    ``max_batch`` itself (``batch_bucket`` clamps there, so a non-power-of-
+    two ``max_batch`` is a reachable shape the pow2 ladder would miss)."""
+    out = []
+    b = spec.min_batch
+    while b <= spec.max_batch:
+        out.append(b)
+        b *= 2
+    if out[-1] != spec.max_batch:
+        out.append(spec.max_batch)
+    return out
+
+
+def dummy_plan(n_ranges: int, width: int) -> QueryPlan:
+    """An inert all-padding plan (for warmup compiles and pad lanes)."""
+    return QueryPlan(
+        q_terms=np.asarray([-1], np.int32),
+        blk_tab=jnp.full((n_ranges, width), -1, jnp.int32),
+        rest_tab=jnp.zeros((n_ranges, width), jnp.int32),
+        order=jnp.arange(n_ranges, dtype=jnp.int32),
+        ordered_bounds=jnp.zeros((n_ranges,), jnp.int32),
+        order_host=np.arange(n_ranges, dtype=np.int32),
+        bounds_host=np.zeros(n_ranges, dtype=np.int64),
+    )
 
 
 class BatchedPlan(NamedTuple):

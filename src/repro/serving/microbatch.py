@@ -30,7 +30,7 @@ from repro.core.anytime import Reactive
 from repro.core.clustered_index import BLOCK
 from repro.serving.batch_engine import BatchEngine, BatchResult
 
-__all__ = ["SlaBudgeter", "ServedQuery", "MicroBatchServer"]
+__all__ = ["SlaBudgeter", "ShardedSlaBudgeter", "ServedQuery", "MicroBatchServer"]
 
 
 @dataclasses.dataclass
@@ -55,6 +55,60 @@ class SlaBudgeter:
             lane_rate = (total_postings / n) / elapsed_ms
             self.rate = (1 - self.ema) * self.rate + self.ema * max(lane_rate, 1e-6)
         self.policy.on_query_end(elapsed_ms, self.sla_ms)
+
+
+@dataclasses.dataclass
+class ShardedSlaBudgeter(SlaBudgeter):
+    """Split a millisecond SLA into per-shard postings budgets.
+
+    Shards on different devices traverse concurrently, so each shard gets
+    the *full* time budget converted at its *own* observed throughput: an
+    independent postings/ms/lane EWMA per shard (a slow or overloaded shard
+    self-reports a lower rate and receives a smaller cap). One shared
+    Reactive alpha (Eq. 7) scales all shards from end-to-end SLA feedback —
+    the SLA is on the merged result, not on any single shard.
+
+    ``budgets(n)`` returns [n, n_shards]; feed observations through
+    ``observe_sharded`` (per-shard postings) — ``MicroBatchServer`` does so
+    automatically when results carry ``shard_postings``.
+    """
+
+    n_shards: int = 1
+
+    def __post_init__(self):
+        self.rates = np.full(self.n_shards, self.rate, dtype=np.float64)
+
+    def budgets(self, n: int) -> np.ndarray:
+        """[n, n_shards] int32 per-(query, shard) postings budgets."""
+        cap = np.maximum(
+            float(self.floor), self.rates * self.sla_ms / self.policy.alpha
+        )
+        cap = np.minimum(cap, float(2**31 - 1))
+        return np.tile(cap.astype(np.int64), (n, 1)).astype(np.int32)
+
+    def observe_sharded(
+        self, elapsed_ms: float, shard_postings: np.ndarray, n: int
+    ) -> None:
+        """Per-shard throughput EWMAs + shared Eq. (7) feedback on alpha."""
+        if elapsed_ms > 0 and n > 0:
+            lane_rates = np.asarray(shard_postings, np.float64) / n / elapsed_ms
+            self.rates = (1 - self.ema) * self.rates + self.ema * np.maximum(
+                lane_rates, 1e-6
+            )
+        self.policy.on_query_end(elapsed_ms, self.sla_ms)
+
+    def observe(self, elapsed_ms: float, total_postings: int, n: int) -> None:
+        """Base-interface feedback: only a total is known, so spread it
+        evenly over shards. Keeps adaptation live for callers driving the
+        plain ``SlaBudgeter`` API (the inherited version would update the
+        unused scalar ``rate`` and silently freeze the per-shard caps);
+        ``observe_sharded`` with real per-shard counters is more accurate.
+        """
+        self.observe_sharded(
+            elapsed_ms,
+            np.full(self.n_shards, total_postings / max(self.n_shards, 1)),
+            n,
+        )
 
 
 @dataclasses.dataclass
@@ -107,9 +161,15 @@ class MicroBatchServer:
         served_at = self.clock()
         batch_ms = (served_at - t0) * 1e3
 
-        self.budgeter.observe(
-            batch_ms, sum(r.postings for r in results), len(results)
-        )
+        if hasattr(self.budgeter, "observe_sharded") and hasattr(
+            results[0], "shard_postings"
+        ):
+            per_shard = np.sum([r.shard_postings for r in results], axis=0)
+            self.budgeter.observe_sharded(batch_ms, per_shard, len(results))
+        else:
+            self.budgeter.observe(
+                batch_ms, sum(r.postings for r in results), len(results)
+            )
         return [
             ServedQuery(
                 rid=rid,

@@ -1,0 +1,643 @@
+"""Range-sharded multi-device anytime retrieval (DESIGN.md §4).
+
+The cluster-skipping index is separable at range boundaries — blocks never
+straddle them and every (term, range) bound is self-contained — so the
+natural distribution unit is a contiguous band of ranges, not a random
+document split. ``core.clustered_index.shard_device_index`` carves the
+built index into postings-mass-balanced bands; this module executes the
+same ``device_traverse`` per shard and merges the per-shard heaps into a
+global top-k under the heap's total order (score desc, docid asc), which
+makes the merged list *bitwise identical* to the single-device traversal
+whenever every shard runs its ranges to completion.
+
+Two execution paths produce identical numbers:
+
+  * **vmap** — the shard axis is a vmapped batch dimension on one device
+    (development / single-host fallback; also what the parity tests pin);
+  * **shard_map** — one shard per mesh device, broker merge via
+    ``all_gather`` inside the compiled step (the deployment path; tests
+    force host devices with ``XLA_FLAGS=--xla_force_host_platform_
+    device_count``).
+
+Budgets are per (query, shard): a global postings budget is split
+proportionally to each shard's postings mass (``split_postings_budget``),
+so the anytime knob degrades all shards evenly instead of truncating
+whichever shard happens to be slow. Fidelity accounting: a shard that
+exits on budget reports the max BoundSum of its unprocessed ranges; the
+merged result carries ``fidelity_bound`` = max over shards, and any
+document missing from the merged list scores at most that bound.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.clustered_index import BLOCK, IndexShard, shard_device_index
+from repro.core.range_daat import (
+    DeviceIndex,
+    Engine,
+    QueryPlan,
+    device_traverse,
+    merge_topk,
+)
+from repro.distributed.sharding import retrieval_mesh, shard_map
+from repro.serving.bucketing import (
+    BucketSpec,
+    batch_ladder,
+    dummy_plan,
+    iter_bucket_chunks,
+)
+
+__all__ = [
+    "INT32_MAX",
+    "ShardedEngine",
+    "ShardedBatchEngine",
+    "ShardedResult",
+    "sharded_batched_traverse",
+    "shard_exit_reason",
+]
+
+INT32_MAX = 2**31 - 1
+
+
+# --------------------------------------------------------------------------
+# Device dispatch — vmap path (single device) and shard_map path (mesh)
+# --------------------------------------------------------------------------
+
+
+def _merge_gathered(vals, gids, k):
+    """[N, S, k] per-shard heaps -> ([N, k], [N, k]) merged global top-k."""
+    n = vals.shape[0]
+    return jax.vmap(lambda v, i: merge_topk(v, i, k))(
+        vals.reshape(n, -1), gids.reshape(n, -1)
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("s_pad", "k", "safe_stop", "prune_blocks", "impl", "interpret"),
+)
+def sharded_batched_traverse(
+    dix: DeviceIndex,  # stacked shard-major leaves [S, ...]
+    doc_base: jnp.ndarray,  # [S] int32 global docid offset per shard
+    blk: jnp.ndarray,  # [N, S, R, B] int32, -1 padded
+    rest: jnp.ndarray,  # [N, S, R, B] int32
+    order: jnp.ndarray,  # [N, S, R] int32 (shard-local range ids)
+    bounds: jnp.ndarray,  # [N, S, R] int32
+    budgets: jnp.ndarray,  # [N, S] int32 per-(query, shard) postings budget
+    maxr: jnp.ndarray,  # [N, S] int32 per-(query, shard) range budget
+    *,
+    s_pad: int,
+    k: int,
+    safe_stop: bool = True,
+    prune_blocks: bool = True,
+    impl: str = "xla",
+    interpret: bool = True,
+):
+    """(batch x shard) traversal on one device: vmap over both axes.
+
+    Returns ``(vals [N,k], ids [N,k] GLOBAL docids, postings [N,S],
+    blocks [N,S], ranges [N,S], exit_safe [N,S], exit_budget [N,S])``.
+    """
+
+    def one(dix1, bt, rt, o, ob, bud, mr):
+        return device_traverse(
+            dix1,
+            bt,
+            rt,
+            o,
+            ob,
+            s_pad=s_pad,
+            k=k,
+            budget_postings=bud,
+            max_ranges=mr,
+            safe_stop=safe_stop,
+            prune_blocks=prune_blocks,
+            impl=impl,
+            interpret=interpret,
+        )
+
+    over_shards = jax.vmap(one, in_axes=(0, 0, 0, 0, 0, 0, 0))
+    res = jax.vmap(over_shards, in_axes=(None, 0, 0, 0, 0, 0, 0))(
+        dix, blk, rest, order, bounds, budgets, maxr
+    )
+    # Leaves are [N, S, ...]; lift local docids to global, then broker-merge.
+    vals = res.state.vals  # [N, S, k]
+    gids = jnp.where(res.state.ids >= 0, res.state.ids + doc_base[None, :, None], -1)
+    out_v, out_i = _merge_gathered(vals, gids, k)
+    return (
+        out_v,
+        out_i,
+        res.state.postings,
+        res.state.blocks,
+        res.ranges_processed,
+        res.exit_safe,
+        res.exit_budget,
+    )
+
+
+def make_mesh_dispatch(
+    mesh,
+    axis: str,
+    *,
+    s_pad: int,
+    k: int,
+    safe_stop: bool,
+    prune_blocks: bool,
+    impl: str,
+    interpret: bool,
+):
+    """Compile the (batch x shard) step with one shard per mesh device.
+
+    Same input/output contract as ``sharded_batched_traverse``; the shard
+    axis is laid over the mesh via the ``distributed.sharding.shard_map``
+    wrapper and the broker merge is an ``all_gather`` + lexsort top-k inside
+    the compiled program, so one dispatch serves the whole batch on all
+    shards (DESIGN.md §4).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def body(dix, doc_base, blk, rest, order, bounds, budgets, maxr):
+        dix1 = jax.tree.map(lambda a: a[0], dix)  # local shard, leading 1 off
+        base = doc_base[0]
+
+        def one(bt, rt, o, ob, bud, mr):
+            return device_traverse(
+                dix1,
+                bt,
+                rt,
+                o,
+                ob,
+                s_pad=s_pad,
+                k=k,
+                budget_postings=bud,
+                max_ranges=mr,
+                safe_stop=safe_stop,
+                prune_blocks=prune_blocks,
+                impl=impl,
+                interpret=interpret,
+            )
+
+        res = jax.vmap(one)(
+            blk[:, 0], rest[:, 0], order[:, 0], bounds[:, 0],
+            budgets[:, 0], maxr[:, 0],
+        )
+        gids = jnp.where(res.state.ids >= 0, res.state.ids + base, -1)
+        g = lambda x: jnp.moveaxis(  # noqa: E731 — gather [S, ...] -> [N, S, ...]
+            jax.lax.all_gather(x, axis), 0, 1
+        )
+        out_v, out_i = _merge_gathered(g(res.state.vals), g(gids), k)
+        diag = g  # [N, S] per-shard counters/flags
+        return (
+            out_v,
+            out_i,
+            diag(res.state.postings),
+            diag(res.state.blocks),
+            diag(res.ranges_processed),
+            diag(res.exit_safe),
+            diag(res.exit_budget),
+        )
+
+    dix_specs = DeviceIndex(
+        docs=P(axis, None),
+        impacts=P(axis, None),
+        blk_start=P(axis, None),
+        blk_len=P(axis, None),
+        blk_maximp=P(axis, None),
+        bounds_dense=P(axis, None, None),
+        range_starts=P(axis, None),
+        range_sizes=P(axis, None),
+    )
+    fn = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            dix_specs,
+            P(axis),
+            P(None, axis, None, None),
+            P(None, axis, None, None),
+            P(None, axis, None),
+            P(None, axis, None),
+            P(None, axis),
+            P(None, axis),
+        ),
+        out_specs=(P(), P(), P(), P(), P(), P(), P()),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+# --------------------------------------------------------------------------
+# Host-facing results
+# --------------------------------------------------------------------------
+
+
+def shard_exit_reason(safe: bool, budget: bool, rp: int, r_loc: int) -> str:
+    """Per-shard exit reason with structural padding folded away.
+
+    Shards are stacked to a common range count R_max; a shard with fewer
+    ranges runs inert padded slots past ``r_loc``, whose zero bounds can
+    trip the device safe/budget flags. Having processed all ``r_loc`` real
+    ranges IS exhaustion, whatever flag fired at the padding.
+    """
+    if rp >= r_loc:
+        return "exhausted"
+    if safe:
+        return "safe"
+    if budget:
+        return "budget"
+    return "exhausted"
+
+
+class ShardedResult(NamedTuple):
+    """Merged global top-k plus per-shard diagnostics for one query."""
+
+    doc_ids: np.ndarray  # [<=k] int32 GLOBAL docids, score-desc / docid-asc
+    scores: np.ndarray  # [<=k] int32
+    shard_postings: np.ndarray  # [S] int64
+    shard_blocks: np.ndarray  # [S] int64
+    shard_ranges: np.ndarray  # [S] int64 ranges processed (<= r_loc)
+    shard_exit_reasons: tuple  # [S] of "safe" | "budget" | "exhausted"
+    fidelity_bound: int  # max BoundSum over all unprocessed ranges (0 if none)
+    exact: bool  # merged list provably equals the exhaustive top-k (see below)
+
+    @property
+    def postings(self) -> int:
+        return int(self.shard_postings.sum())
+
+    @property
+    def blocks(self) -> int:
+        return int(self.shard_blocks.sum())
+
+    @property
+    def exit_budget(self) -> bool:
+        return "budget" in self.shard_exit_reasons
+
+
+# --------------------------------------------------------------------------
+# Engines
+# --------------------------------------------------------------------------
+
+
+class ShardedEngine:
+    """Range-sharded executor over a single built ``ClusteredIndex``.
+
+    Wraps a single-device ``Engine`` (whose ``plan`` stays the global
+    planner) with ``n_shards`` shard-local device indexes. ``use_mesh``:
+    None = auto (mesh when the runtime has >= n_shards devices), True =
+    require a mesh, False = force the single-device vmap path.
+    """
+
+    def __init__(
+        self,
+        engine: Engine,
+        n_shards: int,
+        use_mesh: bool | None = None,
+        mesh_axis: str = "shard",
+    ):
+        self.engine = engine
+        self.k = engine.k
+        self.s_pad = engine.s_pad
+        self.impl = engine.impl
+        self.interpret = engine.interpret
+        self.shards: list[IndexShard] = shard_device_index(engine.index, n_shards)
+        self.n_shards = len(self.shards)
+        self.r_loc = np.asarray([sh.n_ranges for sh in self.shards], np.int64)
+        self.r_max = int(self.r_loc.max())
+        self.mass = np.asarray([sh.postings for sh in self.shards], np.int64)
+        self.doc_base_host = np.asarray(
+            [sh.doc_base for sh in self.shards], np.int64
+        )
+
+        def stack(field, pad=0):
+            arrs = [np.asarray(getattr(sh, field), np.int32) for sh in self.shards]
+            w = max((a.shape[0] for a in arrs), default=1) or 1
+            out = np.full((self.n_shards, w), pad, np.int32)
+            for s, a in enumerate(arrs):
+                out[s, : a.shape[0]] = a
+            return jnp.asarray(out)
+
+        # bounds_dense is a planning-time structure; traversal reads bounds
+        # via the plan tables, so the device mirror carries a placeholder
+        # (the real shard-local bounds live on IndexShard.bounds_dense).
+        self.dix = DeviceIndex(
+            docs=stack("docs"),
+            impacts=stack("impacts"),
+            blk_start=stack("blk_start"),
+            blk_len=stack("blk_len"),
+            blk_maximp=stack("blk_maximp"),
+            bounds_dense=jnp.zeros((self.n_shards, 1, 1), jnp.int32),
+            range_starts=stack("range_starts"),
+            range_sizes=stack("range_sizes"),
+        )
+        self.doc_base = jnp.asarray(self.doc_base_host, jnp.int32)
+
+        if use_mesh is None:
+            use_mesh = self.n_shards > 1 and jax.device_count() >= self.n_shards
+        self.mesh = retrieval_mesh(self.n_shards, mesh_axis) if use_mesh else None
+        self._mesh_axis = mesh_axis
+        self._mesh_fns: dict = {}
+
+    # ------------------------------------------------------------- planning
+    def plan(self, q_terms: np.ndarray) -> QueryPlan:
+        return self.engine.plan(q_terms)
+
+    def shard_plan(self, plan: QueryPlan, width: int | None = None):
+        """Slice a global plan into stacked shard-local tables.
+
+        Returns numpy ``(blk [S, R_max, B], rest, order, bounds)`` with
+        block ids remapped through each shard's ``blk_map``, range rows in
+        shard-local coordinates, and the global processing order restricted
+        per shard (relative order preserved, so BoundSum-descending stays
+        descending within every shard). Shards with fewer than R_max ranges
+        point their padded order slots at an all--1 row — a no-op range.
+        """
+        g_blk = np.asarray(plan.blk_tab)
+        g_rest = np.asarray(plan.rest_tab)
+        w = g_blk.shape[1]
+        B = width or w
+        S, Rm = self.n_shards, self.r_max
+        blk = np.full((S, Rm, B), -1, np.int32)
+        rest = np.zeros((S, Rm, B), np.int32)
+        order = np.zeros((S, Rm), np.int32)
+        bounds = np.zeros((S, Rm), np.int32)
+        for s, sh in enumerate(self.shards):
+            rl = sh.n_ranges
+            rows = g_blk[sh.range_lo : sh.range_hi]
+            blk[s, :rl, :w] = np.where(rows >= 0, sh.blk_map[rows.clip(0)], -1)
+            rest[s, :rl, :w] = g_rest[sh.range_lo : sh.range_hi]
+            sel = (plan.order_host >= sh.range_lo) & (plan.order_host < sh.range_hi)
+            order[s, :rl] = plan.order_host[sel] - sh.range_lo
+            bounds[s, :rl] = np.clip(plan.bounds_host[sel], 0, INT32_MAX)
+            if rl < Rm:
+                order[s, rl:] = rl  # row rl is all -1: inert padding
+        return blk, rest, order, bounds
+
+    # -------------------------------------------------------------- budgets
+    def split_postings_budget(self, budgets) -> np.ndarray:
+        """[N] global postings budgets -> [N, S] proportional to shard mass.
+
+        Ceil so shard slices never sum below the global budget; a *positive*
+        budget is floored at one block per shard (mirror of
+        ``SlaBudgeter.floor`` — a meaningful global budget must not starve a
+        small shard below one block), while budget <= 0 stays 0 on every
+        shard — same "no work, exit on budget" meaning as the unsharded
+        engine. Unbounded stays unbounded.
+        """
+        b = np.asarray(budgets, np.int64).reshape(-1)
+        shares = self.mass / max(int(self.mass.sum()), 1)
+        out = np.ceil(b[:, None] * shares[None, :])
+        out = np.where(b[:, None] > 0, np.maximum(out, BLOCK), 0)
+        out = np.where(b[:, None] >= INT32_MAX, INT32_MAX, out)
+        return np.clip(out, 0, INT32_MAX).astype(np.int32)
+
+    def split_range_budget(self, maxr) -> np.ndarray:
+        """[N] global range caps -> [N, S] proportional to shard range counts."""
+        m = np.asarray(maxr, np.int64).reshape(-1)
+        shares = self.r_loc / max(int(self.r_loc.sum()), 1)
+        out = np.maximum(np.ceil(m[:, None] * shares[None, :]), 1)
+        out = np.where(m[:, None] >= INT32_MAX, INT32_MAX, out)
+        out = np.where(m[:, None] <= 0, 0, out)
+        return np.clip(out, 0, INT32_MAX).astype(np.int32)
+
+    # ------------------------------------------------------------- dispatch
+    def dispatch(
+        self, blk, rest, order, bounds, budgets, maxr,
+        safe_stop: bool = True, prune_blocks: bool = True,
+    ):
+        """Run one (batch x shard) step; inputs are stacked numpy tables."""
+        args = (
+            self.dix,
+            self.doc_base,
+            jnp.asarray(blk),
+            jnp.asarray(rest),
+            jnp.asarray(order),
+            jnp.asarray(bounds),
+            jnp.asarray(budgets, jnp.int32),
+            jnp.asarray(maxr, jnp.int32),
+        )
+        if self.mesh is not None:
+            key = (safe_stop, prune_blocks)
+            if key not in self._mesh_fns:
+                self._mesh_fns[key] = make_mesh_dispatch(
+                    self.mesh,
+                    self._mesh_axis,
+                    s_pad=self.s_pad,
+                    k=self.k,
+                    safe_stop=safe_stop,
+                    prune_blocks=prune_blocks,
+                    impl=self.impl,
+                    interpret=self.interpret,
+                )
+            return self._mesh_fns[key](*args)
+        return sharded_batched_traverse(
+            *args,
+            s_pad=self.s_pad,
+            k=self.k,
+            safe_stop=safe_stop,
+            prune_blocks=prune_blocks,
+            impl=self.impl,
+            interpret=self.interpret,
+        )
+
+    # ------------------------------------------------------------ execution
+    def traverse(
+        self,
+        plan: QueryPlan,
+        budget_postings=INT32_MAX,
+        max_ranges=INT32_MAX,
+        safe_stop: bool = True,
+        prune_blocks: bool = True,
+    ) -> ShardedResult:
+        """Single-query sharded traversal (a batch of one).
+
+        Scalar budgets are split across shards proportionally; a length-S
+        sequence assigns per-shard budgets directly.
+        """
+        blk, rest, order, bounds = self.shard_plan(plan)
+        bud = self._one_query_budget(budget_postings, self.split_postings_budget)
+        mr = self._one_query_budget(max_ranges, self.split_range_budget)
+        out = self.dispatch(
+            blk[None], rest[None], order[None], bounds[None], bud, mr,
+            safe_stop=safe_stop, prune_blocks=prune_blocks,
+        )
+        return self._to_results(out, bounds[None])[0]
+
+    def _one_query_budget(self, value, split_fn) -> np.ndarray:
+        arr = np.asarray(value, np.int64)
+        if arr.ndim == 0:
+            return split_fn([int(arr)])
+        if arr.shape != (self.n_shards,):
+            raise ValueError(f"per-shard budget shape {arr.shape} != ({self.n_shards},)")
+        return np.clip(arr, 0, INT32_MAX).astype(np.int32)[None]
+
+    # --------------------------------------------------------------- unpack
+    def _to_results(self, out, bounds: np.ndarray) -> list[ShardedResult]:
+        """Device outputs + host bounds tables [N, S, R_max] -> results."""
+        vals, ids, post, blocks, ranges, safe, budget = (np.asarray(x) for x in out)
+        results = []
+        for n in range(vals.shape[0]):
+            keep = ids[n] >= 0
+            reasons = tuple(
+                shard_exit_reason(
+                    bool(safe[n, s]), bool(budget[n, s]),
+                    int(ranges[n, s]), int(self.r_loc[s]),
+                )
+                for s in range(self.n_shards)
+            )
+            # fb: fidelity loss attributable to the anytime knob (budget
+            # exits only — the §4 bound surfaced to callers). resid: max
+            # BoundSum over ALL skipped ranges, safe exits included, used
+            # for the exactness certificate below.
+            fb = 0
+            resid = 0
+            for s in range(self.n_shards):
+                rp, rl = int(ranges[n, s]), int(self.r_loc[s])
+                if rp < rl:
+                    r_bound = int(bounds[n, s, rp:rl].max())
+                    resid = max(resid, r_bound)
+                    if reasons[s] == "budget":
+                        fb = max(fb, r_bound)
+            # Exactness certificate, strict about tie-breaks: a doc in a
+            # skipped range can score up to that range's BoundSum, and at
+            # equal score a smaller docid displaces the k-th entry under the
+            # heap's total order — so the device's non-strict safe condition
+            # (bound <= theta) is not enough by itself. Exact iff no skipped
+            # range could hold a scoring doc (resid == 0; covers exhausted
+            # shards and empty-for-query skipped ranges), or the list is
+            # FULL and every skipped range is strictly below the k-th score.
+            # With an under-filled list any unprocessed scoring doc belongs
+            # in the top-k, so fullness is required.
+            n_found = int(keep.sum())
+            exact = resid == 0 or (
+                n_found == self.k and resid < int(vals[n][keep][-1])
+            )
+            results.append(
+                ShardedResult(
+                    doc_ids=ids[n][keep],
+                    scores=vals[n][keep],
+                    shard_postings=post[n].astype(np.int64),
+                    shard_blocks=blocks[n].astype(np.int64),
+                    shard_ranges=np.minimum(
+                        ranges[n].astype(np.int64), self.r_loc
+                    ),
+                    shard_exit_reasons=reasons,
+                    fidelity_bound=fb,
+                    exact=exact,
+                )
+            )
+        return results
+
+
+class ShardedBatchEngine:
+    """Shape-bucketed (batch x shard) executor — the sharded ``BatchEngine``.
+
+    Same static-shape discipline as ``BatchEngine``: plans snap to the
+    ``BucketSpec`` width/batch ladder, so the XLA program cache stays
+    bounded by #width_buckets x #batch_buckets per execution path. One
+    dispatch covers every (lane, shard) pair.
+    """
+
+    def __init__(self, sengine: ShardedEngine, spec: BucketSpec | None = None):
+        self.sengine = sengine
+        self.engine = sengine.engine
+        self.spec = spec or BucketSpec()
+        self.compiled_shapes: set[tuple[int, int]] = set()
+        self.batches_run = 0
+
+    # ------------------------------------------------------------- planning
+    def plan(self, q_terms: np.ndarray) -> QueryPlan:
+        return self.engine.plan(q_terms)
+
+    def plan_many(self, queries: Sequence[np.ndarray]) -> list[QueryPlan]:
+        return [self.engine.plan(q) for q in queries]
+
+    # ------------------------------------------------------------ execution
+    def run_batch(
+        self,
+        plans: Sequence[QueryPlan],
+        budget_postings=None,
+        max_ranges=None,
+        safe_stop: bool = True,
+        prune_blocks: bool = True,
+    ) -> list[ShardedResult]:
+        """Traverse ``plans`` on all shards; results keep input order.
+
+        Budgets may be None (unbounded), a scalar, an [n] per-query vector
+        (split across shards proportionally), or an [n, S] matrix of
+        explicit per-(query, shard) caps.
+        """
+        n = len(plans)
+        if n == 0:
+            return []
+        budgets = self._per_query_shard(
+            budget_postings, n, self.sengine.split_postings_budget
+        )
+        maxr = self._per_query_shard(
+            max_ranges, n, self.sengine.split_range_budget
+        )
+
+        results: list[ShardedResult | None] = [None] * n
+        for width, chunk in iter_bucket_chunks(plans, self.spec):
+            self._run_chunk(
+                [plans[i] for i in chunk], chunk, width, budgets, maxr,
+                safe_stop, prune_blocks, results,
+            )
+        return results  # type: ignore[return-value]
+
+    def _per_query_shard(self, value, n: int, split_fn) -> np.ndarray:
+        S = self.sengine.n_shards
+        if value is None:
+            return np.full((n, S), INT32_MAX, np.int32)
+        arr = np.asarray(value, np.int64)
+        if arr.ndim == 0:
+            arr = np.full(n, int(arr), np.int64)
+        if arr.shape == (n,):
+            return split_fn(arr)
+        if arr.shape == (n, S):
+            return np.clip(arr, 0, INT32_MAX).astype(np.int32)
+        raise ValueError(f"budget shape {arr.shape} not in {{({n},), ({n}, {S})}}")
+
+    def _run_chunk(
+        self, chunk_plans, chunk_idx, width, budgets, maxr,
+        safe_stop, prune_blocks, results,
+    ) -> None:
+        se = self.sengine
+        batch = self.spec.batch_bucket(len(chunk_plans))
+        S, Rm = se.n_shards, se.r_max
+        blk = np.full((batch, S, Rm, width), -1, np.int32)
+        rest = np.zeros((batch, S, Rm, width), np.int32)
+        order = np.zeros((batch, S, Rm), np.int32)
+        bounds = np.zeros((batch, S, Rm), np.int32)
+        b = np.zeros((batch, S), np.int32)  # dummy lanes: zero budgets
+        m = np.zeros((batch, S), np.int32)
+        for lane, (qi, plan) in enumerate(zip(chunk_idx, chunk_plans)):
+            blk[lane], rest[lane], order[lane], bounds[lane] = se.shard_plan(
+                plan, width
+            )
+            b[lane] = budgets[qi]
+            m[lane] = maxr[qi]
+
+        out = se.dispatch(
+            blk, rest, order, bounds, b, m,
+            safe_stop=safe_stop, prune_blocks=prune_blocks,
+        )
+        self.compiled_shapes.add((batch, width))
+        self.batches_run += 1
+        unpacked = se._to_results(out, bounds)
+        for lane, qi in enumerate(chunk_idx):
+            results[qi] = unpacked[lane]
+
+    # ---------------------------------------------------------------- misc
+    def warmup(self, widths: Sequence[int] | None = None) -> None:
+        """Pre-compile every (batch_bucket, width) program for given widths."""
+        R = self.engine.index.n_ranges
+        for w in widths or (self.spec.min_width,):
+            dummy = dummy_plan(R, self.spec.width_bucket(w))
+            for nb in batch_ladder(self.spec):
+                self.run_batch([dummy] * nb)

@@ -1,0 +1,26 @@
+"""Tier-1 wrapper for the docs cross-reference gate.
+
+The real checker is ``.github/check_doc_links.py`` (also a CI step);
+running it here means a dangling ``DESIGN.md §N`` citation or a broken
+relative markdown link fails the local suite before it ever reaches CI.
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_design_sections_and_markdown_links_resolve():
+    out = subprocess.run(
+        [sys.executable, os.path.join(".github", "check_doc_links.py")],
+        capture_output=True,
+        text=True,
+        cwd=_REPO_ROOT,
+        timeout=120,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert out.stdout.startswith("OK:"), out.stdout

@@ -1,0 +1,362 @@
+"""Range-sharded retrieval: shard planner invariants + bitwise parity.
+
+The contract under test (DESIGN.md §4): partitioning the clustered index
+along range boundaries and merging per-shard heaps is *bitwise* identical
+to the single-device ``device_traverse`` whenever budgets are exhaustive —
+same doc ids, scores, and tie-breaks — and per-shard ``exit_reasons`` /
+``fidelity_bound`` surface correctly when a shard hits its budget.
+
+The multi-device (shard_map mesh) variant runs in a subprocess with 4
+forced host devices; in-process tests pin the single-device vmap path
+(device count must stay 1 here, per the dry-run contract).
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.clustered_index import (
+    BLOCK,
+    balance_range_shards,
+    build_index,
+    shard_device_index,
+)
+from repro.core.oracle import exhaustive_topk
+from repro.core.range_daat import Engine
+from repro.data.synth import make_corpus, make_query_log
+from repro.serving import (
+    BucketSpec,
+    MicroBatchServer,
+    ShardedBatchEngine,
+    ShardedEngine,
+    ShardedSlaBudgeter,
+)
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+INT32_MAX = 2**31 - 1
+
+
+def _small_setup(seed: int, n_ranges: int, k: int = 5):
+    corpus = make_corpus(
+        n_docs=900, n_terms=700, n_topics=4, mean_doc_len=50, seed=seed
+    )
+    idx = build_index(corpus, n_ranges=n_ranges, strategy="clustered")
+    eng = Engine(idx, k=k)
+    log = make_query_log(corpus, n_queries=10, seed=seed + 1)
+    return idx, eng, [log.terms[i] for i in range(log.n_queries)]
+
+
+# ------------------------------------------------------------- shard planner
+
+
+def test_balance_range_shards_partitions_and_balances():
+    mass = np.asarray([10, 10, 10, 10, 10, 10, 10, 10])
+    cuts = balance_range_shards(mass, 4)
+    assert cuts.tolist() == [0, 2, 4, 6, 8]
+    # Skewed mass: heavy ranges get their own shard, cuts stay monotone.
+    mass = np.asarray([100, 1, 1, 1, 1, 1, 1, 100])
+    cuts = balance_range_shards(mass, 3)
+    assert cuts[0] == 0 and cuts[-1] == 8
+    assert np.all(np.diff(cuts) >= 1)
+    with pytest.raises(ValueError):
+        balance_range_shards(mass, 9)  # more shards than ranges
+    with pytest.raises(ValueError):
+        balance_range_shards(mass, 0)
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+def test_shard_device_index_remaps_to_local_coordinates(n_shards):
+    idx, _, _ = _small_setup(seed=0, n_ranges=6)
+    shards = shard_device_index(idx, n_shards)
+    assert len(shards) == n_shards
+    # Shards tile the range space and the docid space contiguously.
+    assert shards[0].range_lo == 0 and shards[-1].range_hi == idx.n_ranges
+    for a, b in zip(shards, shards[1:]):
+        assert a.range_hi == b.range_lo
+        assert a.doc_base + a.n_docs == b.doc_base
+    assert sum(sh.postings for sh in shards) == idx.nnz
+    for sh in shards:
+        # Local coordinates: docs in [0, n_docs), range_starts rebased.
+        assert sh.docs.min(initial=0) >= 0
+        assert sh.docs.max(initial=0) < max(sh.n_docs, 1)
+        np.testing.assert_array_equal(
+            sh.range_starts,
+            idx.range_starts[sh.range_lo : sh.range_hi] - sh.doc_base,
+        )
+        np.testing.assert_array_equal(
+            sh.bounds_dense, idx.bounds_dense[:, sh.range_lo : sh.range_hi]
+        )
+        # blk_map round-trip: every owned global block's postings survive.
+        owned = np.nonzero(sh.blk_map >= 0)[0]
+        assert owned.shape[0] == sh.blk_len.shape[0]
+        for g in owned[:: max(1, owned.shape[0] // 8)]:
+            loc = sh.blk_map[g]
+            s_g, l_g = int(idx.blk_start[g]), int(idx.blk_len[g])
+            s_l = int(sh.blk_start[loc])
+            np.testing.assert_array_equal(
+                sh.docs[s_l : s_l + l_g] + sh.doc_base,
+                idx.docs[s_g : s_g + l_g],
+            )
+            np.testing.assert_array_equal(
+                sh.impacts[s_l : s_l + l_g], idx.impacts[s_g : s_g + l_g]
+            )
+
+
+def test_shard_mass_balance_is_reasonable():
+    idx, _, _ = _small_setup(seed=3, n_ranges=8)
+    shards = shard_device_index(idx, 4)
+    masses = np.asarray([sh.postings for sh in shards], np.float64)
+    # Greedy prefix cuts at range granularity: no shard carries more than
+    # the ideal share plus one whole range's worth of postings.
+    per_range = np.bincount(idx.blk_range, weights=idx.blk_len, minlength=idx.n_ranges)
+    assert masses.max() <= masses.sum() / 4 + per_range.max()
+
+
+# ---------------------------------------------------- bitwise parity (vmap)
+
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+@pytest.mark.parametrize("safe_stop", [True, False])
+def test_sharded_matches_single_device_bitwise(n_shards, safe_stop):
+    """Exhaustive budgets: merged shard heaps == single-device top-k, bitwise."""
+    _, eng, queries = _small_setup(seed=7, n_ranges=6)
+    se = ShardedEngine(eng, n_shards, use_mesh=False)
+    for q in queries:
+        plan = eng.plan(q)
+        single = eng.traverse(plan, safe_stop=safe_stop)
+        sids, svals = eng.topk_docs(single.state)
+        sh = se.traverse(plan, safe_stop=safe_stop)
+        assert sh.doc_ids.tolist() == sids.tolist()
+        assert sh.scores.tolist() == svals.tolist()
+        assert sh.exact and sh.fidelity_bound == 0
+        assert all(r in ("safe", "exhausted") for r in sh.shard_exit_reasons)
+
+
+def test_sharded_batch_engine_parity_across_buckets():
+    """ShardedBatchEngine over ragged batches == looped single-device."""
+    _, eng, queries = _small_setup(seed=11, n_ranges=6)
+    stripped = [q[q >= 0] for q in queries]
+    fat = np.unique(np.concatenate(stripped))
+    ragged = [stripped[0][:1]] + stripped + [fat, fat[::2]]
+    se = ShardedEngine(eng, 4, use_mesh=False)
+    beng = ShardedBatchEngine(se, BucketSpec(max_batch=4))
+    plans = beng.plan_many(ragged)
+    results = beng.run_batch(plans)
+    assert len(beng.compiled_shapes) >= 2
+    for plan, r in zip(plans, results):
+        single = eng.traverse(plan)
+        sids, svals = eng.topk_docs(single.state)
+        assert r.doc_ids.tolist() == sids.tolist()
+        assert r.scores.tolist() == svals.tolist()
+
+
+def test_single_shard_reduces_to_engine():
+    _, eng, queries = _small_setup(seed=13, n_ranges=4)
+    se = ShardedEngine(eng, 1, use_mesh=False)
+    for q in queries[:4]:
+        plan = eng.plan(q)
+        sids, svals = eng.topk_docs(eng.traverse(plan).state)
+        sh = se.traverse(plan)
+        assert sh.doc_ids.tolist() == sids.tolist()
+        assert sh.scores.tolist() == svals.tolist()
+
+
+# ------------------------------------------------- budgets and exit reasons
+
+
+def test_per_shard_budget_exit_reasons_surface():
+    """A starved shard reports "budget"; its peers run to exhaustion."""
+    _, eng, queries = _small_setup(seed=17, n_ranges=6)
+    se = ShardedEngine(eng, 4, use_mesh=False)
+    star = int(np.argmax(se.r_loc))  # needs >= 2 ranges to bind mid-shard
+    assert se.r_loc[star] >= 2
+    beng = ShardedBatchEngine(se, BucketSpec(max_batch=4))
+    plans = beng.plan_many(queries[:4])
+    budgets = np.full((4, se.n_shards), INT32_MAX, np.int64)
+    budgets[:, star] = 1
+    results = beng.run_batch(plans, budget_postings=budgets, safe_stop=False)
+    free = beng.run_batch(plans, safe_stop=False)
+    starved_seen = False
+    for r, f in zip(results, free):
+        for s, reason in enumerate(r.shard_exit_reasons):
+            if s != star:
+                assert reason == "exhausted"
+        if r.shard_exit_reasons[star] == "budget":
+            starved_seen = True
+            assert r.shard_ranges[star] < se.r_loc[star]
+            assert not r.exact or r.fidelity_bound < int(r.scores[-1])
+        # Starving one shard never perturbs the other shards' work.
+        np.testing.assert_array_equal(
+            np.delete(r.shard_postings, star), np.delete(f.shard_postings, star)
+        )
+    assert starved_seen
+
+
+def test_fidelity_bound_certifies_missed_documents():
+    """Budget exits: every missed oracle doc scores <= the reported bound."""
+    idx, eng, queries = _small_setup(seed=19, n_ranges=6)
+    # Heavy union queries: enough postings per shard that a 2-block budget
+    # actually binds (light queries never leave the per-shard BLOCK floor).
+    stripped = [q[q >= 0] for q in queries]
+    fat = np.unique(np.concatenate(stripped))
+    queries = [fat, fat[::2], fat[1::2], fat[::3]] + stripped[:4]
+    se = ShardedEngine(eng, 4, use_mesh=False)
+    beng = ShardedBatchEngine(se, BucketSpec(max_batch=4))
+    plans = beng.plan_many(queries)
+    results = beng.run_batch(
+        plans, budget_postings=np.full(len(plans), 2 * BLOCK), safe_stop=False
+    )
+    budgeted = 0
+    for q, r in zip(queries, results):
+        oid, osc = exhaustive_topk(idx, q, eng.k)
+        if "budget" in r.shard_exit_reasons:
+            budgeted += 1
+        got = set(r.doc_ids.tolist())
+        theta = int(r.scores[-1]) if r.scores.shape[0] else 0
+        for d, s in zip(oid.tolist(), osc.tolist()):
+            if d not in got:
+                assert s <= max(r.fidelity_bound, theta), (d, s, r)
+        if r.exact:
+            assert got == set(oid.tolist()[: len(got)]) or r.scores.shape[0] == 0
+    assert budgeted > 0  # the knob actually bound somewhere
+
+
+def test_exact_requires_full_list_under_budget_exit():
+    """A budget-exited query with fewer than k results is never 'exact'.
+
+    With an under-filled list *any* unprocessed document belongs in the
+    top-k, so the fidelity bound alone must not certify exactness.
+    """
+    _, eng, queries = _small_setup(seed=31, n_ranges=6, k=50)
+    se = ShardedEngine(eng, 4, use_mesh=False)
+    beng = ShardedBatchEngine(se, BucketSpec(max_batch=4))
+    plans = beng.plan_many(queries)
+    budgets = np.ones((len(plans), se.n_shards), np.int64)  # 1 range per shard
+    results = beng.run_batch(plans, budget_postings=budgets, safe_stop=False)
+    underfull = 0
+    for r in results:
+        if "budget" in r.shard_exit_reasons and r.doc_ids.shape[0] < eng.k:
+            assert not r.exact, r
+            underfull += 1
+    assert underfull > 0  # the scenario actually occurred
+
+
+def test_global_budget_splits_proportionally():
+    _, eng, _ = _small_setup(seed=23, n_ranges=6)
+    se = ShardedEngine(eng, 3, use_mesh=False)
+    split = se.split_postings_budget([9000, INT32_MAX, 0])
+    assert split.shape == (3, 3)
+    # Explicit zero stays zero on every shard (same meaning as unsharded).
+    assert np.all(split[2] == 0)
+    # Proportional to mass, ceil'd, floored at one block.
+    assert int(split[0].sum()) >= 9000
+    assert np.all(split[0] >= BLOCK)
+    np.testing.assert_allclose(
+        split[0] / split[0].sum(), se.mass / se.mass.sum(), atol=0.05
+    )
+    assert np.all(split[1] == INT32_MAX)  # unbounded stays unbounded
+    ranges = se.split_range_budget([3, 0, INT32_MAX])
+    assert np.all(ranges[0] >= 1) and int(ranges[0].sum()) >= 3
+    assert np.all(ranges[1] == 0) and np.all(ranges[2] == INT32_MAX)
+
+
+# --------------------------------------------------------- SLA + request loop
+
+
+def test_sharded_sla_budgeter_per_shard_ewma():
+    bud = ShardedSlaBudgeter(sla_ms=10.0, rate=100.0, n_shards=3)
+    b0 = bud.budgets(2)
+    assert b0.shape == (2, 3) and np.all(b0 == b0[0, 0])
+    # Unequal shard throughput -> unequal caps next round.
+    bud.observe_sharded(10.0, np.asarray([10_000, 1_000, 100]), n=2)
+    b1 = bud.budgets(1)[0]
+    assert b1[0] > b1[1] > b1[2] >= bud.floor
+    # Shared Eq. (7) feedback: an SLA miss shrinks every shard's cap.
+    alpha0 = bud.policy.alpha
+    bud.observe_sharded(100.0, np.asarray([1, 1, 1]), n=1)
+    assert bud.policy.alpha > alpha0
+    assert np.all(bud.budgets(1)[0] <= b1)
+    # Floor survives a miss streak.
+    for _ in range(50):
+        bud.observe_sharded(1e5, np.asarray([1, 1, 1]), n=1)
+    assert np.all(bud.budgets(1)[0] >= bud.floor)
+
+
+def test_microbatch_server_over_sharded_engine():
+    """The request loop runs unchanged over the sharded (batch x shard) path."""
+    _, eng, queries = _small_setup(seed=29, n_ranges=6)
+    se = ShardedEngine(eng, 2, use_mesh=False)
+    beng = ShardedBatchEngine(se, BucketSpec(max_batch=4))
+    budgeter = ShardedSlaBudgeter(sla_ms=1e9, n_shards=2)
+    server = MicroBatchServer(beng, budgeter, max_batch=4)
+    served = server.replay(queries, batch_size=4)
+    assert sorted(s.rid for s in served) == list(range(len(queries)))
+    assert server.pending == 0
+    for s in served:
+        single = eng.traverse(eng.plan(queries[s.rid]))
+        sids, svals = eng.topk_docs(single.state)
+        assert s.result.doc_ids.tolist() == sids.tolist()
+        assert s.result.scores.tolist() == svals.tolist()
+    # Per-shard EWMAs were fed by the server's observe_sharded hook.
+    assert not np.all(budgeter.rates == 100.0)
+
+
+# ------------------------------------------------- multi-device (shard_map)
+
+_SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, numpy as np
+from repro.core.clustered_index import build_index
+from repro.core.range_daat import Engine
+from repro.data.synth import make_corpus, make_query_log
+from repro.serving import BucketSpec, ShardedBatchEngine, ShardedEngine
+
+assert jax.device_count() == 4, jax.device_count()
+corpus = make_corpus(n_docs=900, n_terms=700, n_topics=4, mean_doc_len=50, seed=7)
+idx = build_index(corpus, n_ranges=6, strategy="clustered")
+eng = Engine(idx, k=5)
+log = make_query_log(corpus, n_queries=8, seed=8)
+queries = [log.terms[i] for i in range(log.n_queries)]
+
+se = ShardedEngine(eng, 4)  # auto: 4 devices -> shard_map mesh path
+assert se.mesh is not None
+beng = ShardedBatchEngine(se, BucketSpec(max_batch=4))
+plans = beng.plan_many(queries)
+ok = 0
+for plan, r in zip(plans, beng.run_batch(plans)):
+    single = eng.traverse(plan)
+    sids, svals = eng.topk_docs(single.state)
+    assert r.doc_ids.tolist() == sids.tolist(), (r.doc_ids, sids)
+    assert r.scores.tolist() == svals.tolist()
+    assert r.exact
+    ok += 1
+
+# Exit reasons cross the mesh too: starve one shard, flags come back per shard.
+star = int(np.argmax(se.r_loc))
+budgets = np.full((len(plans), 4), 2**31 - 1, np.int64)
+budgets[:, star] = 1
+starved = beng.run_batch(plans, budget_postings=budgets, safe_stop=False)
+assert any(r.shard_exit_reasons[star] == "budget" for r in starved)
+print("SHARDED_MESH_OK", ok)
+"""
+
+
+@pytest.mark.slow
+def test_four_shard_mesh_matches_single_device_bitwise():
+    """Acceptance: 4-shard shard_map engine == single-device top-k, bitwise."""
+    out = subprocess.run(
+        [sys.executable, "-c", _SUBPROC],
+        capture_output=True,
+        text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu"},
+        cwd=_REPO_ROOT,
+        timeout=900,
+    )
+    assert "SHARDED_MESH_OK 8" in out.stdout, out.stdout + out.stderr
