@@ -1,0 +1,100 @@
+"""S3: index lifecycle — artifact size on disk, load wall-time, HBM bytes.
+
+Builds the cluster-skipping index once (cached), saves it as a versioned
+artifact at int32 and int8 impact storage (DESIGN.md §8), and reports per
+dtype: bytes on disk, save/load wall-time (eager and memory-mapped), the
+device HBM footprint from ``space_report()["device_bytes"]``, and a
+bitwise parity check of the loaded artifact's ``device_traverse`` top-k
+against the in-memory build — the acceptance contract of the lifecycle
+subsystem, measured rather than assumed.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+
+import numpy as np
+
+from benchmarks import common
+from repro import index_io
+from repro.core.range_daat import Engine
+
+N_PARITY_QUERIES = 20
+
+
+def _dir_bytes(path: str) -> int:
+    total = 0
+    for root, _, files in os.walk(path):
+        total += sum(os.path.getsize(os.path.join(root, f)) for f in files)
+    return total
+
+
+def _topk(engine: Engine, q: np.ndarray):
+    res = engine.traverse(engine.plan(q))
+    return np.asarray(res.state.ids).tolist(), np.asarray(res.state.vals).tolist()
+
+
+def run():
+    corpus = common.bench_corpus()
+    queries = common.bench_queries(corpus, n=N_PARITY_QUERIES)
+    index = common.bench_index(corpus, "clustered_bp")
+    ref = Engine(index, k=10)
+    common.warmup_engine(ref, [queries.terms[i] for i in range(3)])
+
+    rows = []
+    tmp = tempfile.mkdtemp(prefix="bench_index_io_")
+    try:
+        for impact_dtype in ("int32", "int8"):
+            path = os.path.join(tmp, f"artifact_{impact_dtype}")
+            with common.Timer() as t_save:
+                index_io.save_index(index, path, impact_dtype=impact_dtype)
+            with common.Timer() as t_load:
+                loaded = index_io.load_index(path)
+            with common.Timer() as t_mmap:
+                index_io.load_index(path, mmap=True)
+
+            eng = Engine(loaded, k=10, impact_dtype=impact_dtype)
+            common.warmup_engine(eng, [queries.terms[i] for i in range(3)])
+            parity = all(
+                _topk(eng, queries.terms[i]) == _topk(ref, queries.terms[i])
+                for i in range(queries.n_queries)
+            )
+            dev = index.space_report(impact_dtype)["device_bytes"]
+            rows.append(
+                {
+                    "bench": "S3_index_io",
+                    "impact_dtype": impact_dtype,
+                    "disk_mb": round(_dir_bytes(path) / 1e6, 3),
+                    "save_ms": round(t_save.ms, 2),
+                    "load_ms_eager": round(t_load.ms, 2),
+                    "load_ms_mmap": round(t_mmap.ms, 2),
+                    "hbm_impacts_bytes": dev["impacts"],
+                    "hbm_postings_bytes": dev["postings"],
+                    "hbm_total_bytes": dev["total"],
+                    "fingerprint_stable": loaded.fingerprint() == index.fingerprint(),
+                    "parity_bitwise": parity,
+                }
+            )
+        i32 = rows[0]
+        for r in rows:
+            r["hbm_impacts_ratio_vs_int32"] = round(
+                i32["hbm_impacts_bytes"] / r["hbm_impacts_bytes"], 2
+            )
+            r["hbm_postings_ratio_vs_int32"] = round(
+                i32["hbm_postings_bytes"] / r["hbm_postings_bytes"], 2
+            )
+            r["hbm_total_ratio_vs_int32"] = round(
+                i32["hbm_total_bytes"] / r["hbm_total_bytes"], 2
+            )
+            r["disk_ratio_vs_int32"] = round(i32["disk_mb"] / r["disk_mb"], 2)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    common.save_result("S3_index_io", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -34,7 +34,11 @@ def run():
                 "bench": "T2_index_space",
                 "index_type": index_type,
                 "ordering": ordering,
-                **{k: round(v * 1024, 3) for k, v in rep.items()},  # MiB
+                **{
+                    k: round(v * 1024, 3)
+                    for k, v in rep.items()
+                    if k.endswith("_gib")  # MiB; device_bytes has its own bench (S3)
+                },
                 "jass_postings_mib": round(jass * 1024, 3),
                 "overhead_vs_default": round(
                     rep["total_gib"]

@@ -25,6 +25,7 @@ MODULES = [
     ("F11_scaling", "benchmarks.bench_scaling"),
     ("S1_batch_serving", "benchmarks.bench_batch_serving"),
     ("S2_sharded_serving", "benchmarks.bench_sharded_serving"),
+    ("S3_index_io", "benchmarks.bench_index_io"),
     ("T8_failures", "benchmarks.bench_failures"),
     ("Q_quantization", "benchmarks.bench_quantization"),
 ]
@@ -88,6 +89,14 @@ def _headline(name: str, rows) -> tuple[float, str]:
                 1e6 / max(r["qps"], 1e-9),
                 f"qps_4shard={r['qps']}_path={r['path'].split()[0]}"
                 f"_vs_batch={r['speedup_vs_batch']}x",
+            )
+        if name == "S3_index_io":
+            r8 = next(x for x in rows if x["impact_dtype"] == "int8")
+            return (
+                r8["load_ms_eager"] * 1e3,
+                f"disk_mb={r8['disk_mb']}"
+                f"_hbm_impacts={r8['hbm_impacts_ratio_vs_int32']}x"
+                f"_parity={r8['parity_bitwise']}",
             )
         if name == "Q_quantization":
             r8 = next(x for x in rows if x["bits"] == 8)

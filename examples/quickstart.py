@@ -3,8 +3,12 @@
     PYTHONPATH=src python examples/quickstart.py
 """
 
+import os
+import tempfile
+
 import numpy as np
 
+from repro import index_io
 from repro.core import Engine, arrange, build_index
 from repro.core.anytime import Predictive, run_query_anytime
 from repro.core.metrics import rbo
@@ -41,6 +45,24 @@ def main():
               f"RBO vs exhaustive = {rbo(fast.doc_ids.tolist(), oid.tolist()):.3f}")
         assert safe.doc_ids.tolist() == oid.tolist(), "safe mode must be exact"
     print("   safe mode reproduced the exhaustive oracle exactly.")
+
+    print("4) Index lifecycle: save artifact (int8 impacts), reload, re-serve ...")
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "quickstart.art")
+        index_io.save_index(index, path, impact_dtype="int8")
+        loaded = Engine.from_artifact(path, k=10)
+        dev8 = index.space_report("int8")["device_bytes"]
+        dev32 = index.space_report("int32")["device_bytes"]
+        print(f"   saved + reloaded (fingerprint {index.fingerprint()}); "
+              f"impacts HBM {dev32['impacts']} B (int32) -> "
+              f"{dev8['impacts']} B (int8), "
+              f"{dev32['impacts'] / dev8['impacts']:.0f}x smaller")
+        q = queries.terms[0]
+        a = engine.traverse(engine.plan(q))
+        b = loaded.traverse(loaded.plan(q))
+        assert np.asarray(a.state.ids).tolist() == np.asarray(b.state.ids).tolist()
+        assert np.asarray(a.state.vals).tolist() == np.asarray(b.state.vals).tolist()
+        print("   loaded int8 artifact reproduced the in-memory top-k bitwise.")
 
 
 if __name__ == "__main__":

@@ -21,7 +21,6 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import os
-import pickle
 
 import numpy as np
 
@@ -39,8 +38,41 @@ __all__ = [
     "balance_range_shards",
     "build_index",
     "build_index_cached",
+    "device_bytes_report",
     "shard_device_index",
 ]
+
+
+def device_bytes_report(
+    nnz: int,
+    n_blocks: int,
+    n_terms: int,
+    n_ranges: int,
+    impact_dtype: str = "int32",
+) -> dict[str, int]:
+    """HBM bytes of a ``DeviceIndex`` upload from index dimensions alone.
+
+    The single source of the accounting formula: the built index delegates
+    here (``ClusteredIndex.device_bytes``), and artifact tooling computes
+    the same report straight from manifest metadata without loading any
+    array (``python -m repro.index_io inspect``).
+    """
+    if impact_dtype not in ("int32", "int8"):
+        raise ValueError(f"impact_dtype {impact_dtype!r} not in ('int32', 'int8')")
+    imp_itemsize = 1 if impact_dtype == "int8" else 4
+    out = {
+        "docs": nnz * 4,
+        "impacts": nnz * imp_itemsize,
+        "blk_start": n_blocks * 4,
+        "blk_len": n_blocks * 4,
+        "blk_maximp": n_blocks * 4,
+        "bounds_dense": n_terms * n_ranges * 4,
+        "range_starts": n_ranges * 4,
+        "range_sizes": n_ranges * 4,
+    }
+    out["postings"] = out["docs"] + out["impacts"]
+    out["total"] = sum(v for k, v in out.items() if k != "postings")
+    return out
 
 
 @dataclasses.dataclass
@@ -99,11 +131,30 @@ class ClusteredIndex:
         return int(self.arrangement.range_sizes.max())
 
     # ---------------------------------------------------------------- space
-    def space_report(self) -> dict[str, float]:
+    def device_bytes(self, impact_dtype: str = "int32") -> dict[str, int]:
+        """Actual HBM bytes per device array at the chosen impact dtype.
+
+        Mirrors exactly what ``range_daat.Engine`` uploads as its
+        ``DeviceIndex`` — one entry per device array (all int32 except
+        ``impacts``, which is 1 B/posting under ``impact_dtype="int8"``,
+        DESIGN.md §8) plus ``postings`` (docs + impacts) and ``total``
+        aggregates. Tests assert these equal the uploaded buffers' nbytes.
+        """
+        return device_bytes_report(
+            nnz=self.nnz,
+            n_blocks=self.n_blocks,
+            n_terms=self.n_terms,
+            n_ranges=self.n_ranges,
+            impact_dtype=impact_dtype,
+        )
+
+    def space_report(self, impact_dtype: str = "int32") -> dict:
         """Logical space accounting in GiB at paper-matched widths (T2).
 
         docids at 4 B, impacts at ceil(bits/8) B, block metadata, the sparse
         (term, range) bound directory, listwise bounds, and the cluster map.
+        The ``device_bytes`` section reports the *actual* HBM footprint of
+        the device mirror at ``impact_dtype`` (see :meth:`device_bytes`).
         """
         gib = 1 / (1024**3)
         imp_bytes = (self.quantizer.bits + 7) // 8
@@ -122,6 +173,7 @@ class ClusteredIndex:
             "cluster_map_gib": cluster_map * gib,
             "total_gib": (postings + blocks + rangewise + listwise + cluster_map)
             * gib,
+            "device_bytes": self.device_bytes(impact_dtype),
         }
 
     # ------------------------------------------------------------- queries
@@ -430,18 +482,31 @@ def build_index_cached(
     cache_dir: str = ".cache",
     **kwargs,
 ) -> ClusteredIndex:
-    """Disk-cached index build (BP + k-means are the slow offline steps)."""
+    """Disk-cached index build (BP + k-means are the slow offline steps).
+
+    Cached as a versioned ``repro.index_io`` artifact directory (DESIGN.md
+    §8) — same sha1 cache-key scheme as the old pickle path, but the
+    on-disk representation is the inspectable, version-checked format: a
+    corrupt cache entry raises instead of silently unpickling, while an
+    entry from an older format version is treated as a miss and rebuilt.
+    """
+    from repro import index_io  # local: index_io sits above core
+
     key = hashlib.sha1(
         (corpus.fingerprint() + repr(sorted(kwargs.items()))).encode()
     ).hexdigest()[:16]
-    path = os.path.join(cache_dir, f"index_{key}.pkl")
-    if os.path.exists(path):
-        with open(path, "rb") as f:
-            return pickle.load(f)
+    path = os.path.join(cache_dir, f"index_{key}")
+    if os.path.isdir(path):
+        try:
+            return index_io.load_index(path)
+        except index_io.VersionMismatchError:
+            pass  # older format — self-heal: rebuild and overwrite below
     idx = build_index(corpus, **kwargs)
     os.makedirs(cache_dir, exist_ok=True)
-    tmp = path + ".tmp"
-    with open(tmp, "wb") as f:
-        pickle.dump(idx, f)
-    os.replace(tmp, path)
+    index_io.save_index(
+        idx,
+        path,
+        build_params={k: repr(v) for k, v in sorted(kwargs.items())},
+        overwrite=True,
+    )
     return idx

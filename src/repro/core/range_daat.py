@@ -30,12 +30,15 @@ from repro.kernels.range_scorer import ops as scorer_ops
 
 __all__ = [
     "DeviceIndex",
+    "IMPACT_BIAS",
+    "IMPACT_DTYPES",
     "TopKState",
     "TraverseResult",
     "QueryPlan",
     "Engine",
     "init_state",
     "merge_topk",
+    "pack_impacts",
     "score_range_step",
     "device_traverse",
     "batched_traverse",
@@ -45,12 +48,31 @@ __all__ = [
     "exit_reasons",
 ]
 
+IMPACT_BIAS = scorer_ops.IMPACT_BIAS
+IMPACT_DTYPES = ("int32", "int8")
+
+
+def pack_impacts(impacts: np.ndarray, impact_dtype: str) -> np.ndarray:
+    """Host impacts (true int32 codes) -> device storage representation.
+
+    ``"int32"`` uploads impacts verbatim; ``"int8"`` stores the biased code
+    ``impact - IMPACT_BIAS`` so 8-bit quantized impacts (range [1, 255])
+    fit a signed byte — 1 B/posting in HBM, widened back inside the scorer
+    gather (DESIGN.md §8). Requires every impact <= 2^8 - 1; the caller
+    (``Engine``) enforces this via the quantizer's bit width.
+    """
+    if impact_dtype == "int32":
+        return np.asarray(impacts, np.int32)
+    if impact_dtype == "int8":
+        return (np.asarray(impacts, np.int64) - IMPACT_BIAS).astype(np.int8)
+    raise ValueError(f"impact_dtype {impact_dtype!r} not in {IMPACT_DTYPES}")
+
 
 class DeviceIndex(NamedTuple):
     """jnp mirror of the host index (flat arrays only — a valid pytree)."""
 
     docs: jnp.ndarray  # [nnz] int32
-    impacts: jnp.ndarray  # [nnz] int32
+    impacts: jnp.ndarray  # [nnz] int32, or int8 biased by IMPACT_BIAS (§8)
     blk_start: jnp.ndarray  # [NB] int32
     blk_len: jnp.ndarray  # [NB] int32
     blk_maximp: jnp.ndarray  # [NB] int32
@@ -357,6 +379,8 @@ class Engine:
     oblivious baseline). ``bounds``: "range" (U[t,r], enables safe stop and
     tight block pruning) or "global" (listwise U_t only — the Default-index
     baseline; safe stop then uses the whole-collection bound).
+    ``impact_dtype``: "int32" (default) or "int8" — native 8-bit postings
+    impacts in HBM, widened only inside the scorer gather (DESIGN.md §8).
     """
 
     def __init__(
@@ -367,6 +391,7 @@ class Engine:
         bounds: str = "range",
         impl: str = "xla",
         interpret: bool = True,
+        impact_dtype: str = "int32",
     ):
         self.index = index
         self.k = k
@@ -374,12 +399,20 @@ class Engine:
         self.bounds = bounds
         self.impl = impl
         self.interpret = interpret
+        if impact_dtype not in IMPACT_DTYPES:
+            raise ValueError(f"impact_dtype {impact_dtype!r} not in {IMPACT_DTYPES}")
+        if impact_dtype == "int8" and index.quantizer.bits > 8:
+            raise ValueError(
+                f"impact_dtype='int8' needs quantizer.bits <= 8, "
+                f"got {index.quantizer.bits}"
+            )
+        self.impact_dtype = impact_dtype
         self.s_pad = int(
             (index.max_range_size + BLOCK - 1) // BLOCK * BLOCK
         ) or BLOCK
         self.dix = DeviceIndex(
             docs=jnp.asarray(index.docs, jnp.int32),
-            impacts=jnp.asarray(index.impacts, jnp.int32),
+            impacts=jnp.asarray(pack_impacts(index.impacts, impact_dtype)),
             blk_start=jnp.asarray(index.blk_start, jnp.int32),
             blk_len=jnp.asarray(index.blk_len, jnp.int32),
             blk_maximp=jnp.asarray(index.blk_maximp, jnp.int32),
@@ -387,6 +420,21 @@ class Engine:
             range_starts=jnp.asarray(index.range_starts, jnp.int32),
             range_sizes=jnp.asarray(index.arrangement.range_sizes, jnp.int32),
         )
+
+    @classmethod
+    def from_artifact(cls, path: str, **kwargs) -> "Engine":
+        """Load a saved index artifact (``repro.index_io``) into an engine.
+
+        ``impact_dtype`` defaults to the dtype the artifact was saved with,
+        so an int8 artifact serves int8 in HBM unless overridden.
+        """
+        from repro import index_io  # local: index_io sits above core
+
+        index = index_io.load_index(path)
+        kwargs.setdefault(
+            "impact_dtype", index_io.read_manifest(path)["impact_dtype"]
+        )
+        return cls(index, **kwargs)
 
     # ------------------------------------------------------------- planning
     def plan(self, q_terms: np.ndarray) -> QueryPlan:

@@ -1,0 +1,59 @@
+"""Index lifecycle subsystem (DESIGN.md §8).
+
+Three pillars:
+
+  * **artifact** — a versioned on-disk representation of ``ClusteredIndex``
+    and per-shard ``IndexShard`` sets: a JSON manifest (format version,
+    build params, quantizer state, fingerprint) plus one ``.npy`` per array
+    with optional memory-mapped loading. ``save_index``/``load_index`` and
+    ``save_shards``/``load_shards`` round-trip bitwise — the loaded artifact
+    produces `device_traverse` results identical to the in-memory build.
+  * **corpus_io** — a ``Corpus`` reader registry: TSV/JSONL collection
+    readers that run anywhere, and CIFF / ``ir_datasets`` readers gated
+    behind the optional ``repro[corpus]`` extra with a clean error when the
+    dependency is absent.
+  * **native int8 impact storage** — artifacts persist impacts as biased
+    int8 codes (``impact - IMPACT_BIAS``) and engines built from them keep
+    postings impacts int8 in HBM, widening only inside the scorer gather
+    (``kernels/range_scorer/ref.py``).
+
+CLI: ``python -m repro.index_io {build,inspect,validate}``.
+"""
+
+from repro.index_io.artifact import (  # noqa: F401
+    FORMAT_VERSION,
+    ArtifactError,
+    CorruptArtifactError,
+    VersionMismatchError,
+    load_index,
+    load_shards,
+    read_manifest,
+    save_index,
+    save_shards,
+    validate_artifact,
+)
+from repro.index_io.corpus_io import (  # noqa: F401
+    MissingDependencyError,
+    available_readers,
+    get_reader,
+    read_corpus,
+    register_reader,
+)
+
+__all__ = [
+    "FORMAT_VERSION",
+    "ArtifactError",
+    "CorruptArtifactError",
+    "MissingDependencyError",
+    "VersionMismatchError",
+    "available_readers",
+    "get_reader",
+    "load_index",
+    "load_shards",
+    "read_corpus",
+    "read_manifest",
+    "register_reader",
+    "save_index",
+    "save_shards",
+    "validate_artifact",
+]

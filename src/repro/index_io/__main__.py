@@ -1,0 +1,206 @@
+"""Index lifecycle CLI (DESIGN.md §8).
+
+    python -m repro.index_io build    --out DIR [--reader synth|tsv|jsonl|ciff|ir_datasets]
+                                      [--source PATH_OR_ID] [--impact-dtype int8|int32]
+                                      [--shards N] [index-build options]
+    python -m repro.index_io inspect  DIR [--json]
+    python -m repro.index_io validate DIR
+
+``build`` ingests a corpus through the reader registry, builds the
+cluster-skipping index, and saves a versioned artifact (optionally plus a
+range-sharded artifact). ``inspect`` prints the manifest, per-array table,
+and space report without loading postings eagerly. ``validate``
+deep-checks checksums, dtypes/shapes, and the index fingerprint.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+from repro.index_io import artifact, corpus_io
+
+
+def _build(args: argparse.Namespace) -> int:
+    from repro.core.clustered_index import build_index, shard_device_index
+
+    if args.impact_dtype == "int8" and args.bits > 8:
+        raise ValueError(
+            f"--impact-dtype int8 needs --bits <= 8 (got {args.bits}); "
+            f"use --impact-dtype int32 for wider quantization"
+        )
+
+    reader_kw = {}
+    if args.reader == "synth":
+        reader_kw = dict(
+            n_docs=args.n_docs, n_terms=args.n_terms, n_topics=args.n_topics,
+            mean_doc_len=args.mean_doc_len, seed=args.seed,
+        )
+    elif args.max_docs is not None:
+        reader_kw = dict(max_docs=args.max_docs)
+
+    t0 = time.perf_counter()
+    corpus = corpus_io.read_corpus(args.reader, args.source, **reader_kw)
+    t1 = time.perf_counter()
+    print(
+        f"read [{args.reader}] {corpus.n_docs} docs, {corpus.n_terms} terms, "
+        f"{corpus.nnz} doc-term pairs ({t1 - t0:.1f}s)"
+    )
+
+    index = build_index(
+        corpus, n_ranges=args.n_ranges, strategy=args.strategy,
+        bits=args.bits, seed=args.seed,
+    )
+    t2 = time.perf_counter()
+    print(
+        f"built index: {index.nnz} postings, {index.n_blocks} blocks, "
+        f"{index.n_ranges} ranges ({t2 - t1:.1f}s)"
+    )
+
+    build_params = dict(
+        reader=args.reader, source=args.source, n_ranges=args.n_ranges,
+        strategy=args.strategy, bits=args.bits, seed=args.seed,
+    )
+    artifact.save_index(
+        index, args.out, impact_dtype=args.impact_dtype,
+        build_params=build_params, overwrite=args.overwrite,
+    )
+    print(f"saved {args.out} (impact_dtype={args.impact_dtype})")
+
+    if args.shards:
+        shards = shard_device_index(index, args.shards)
+        spath = args.out + f".shards{args.shards}"
+        artifact.save_shards(
+            shards, spath, impact_dtype=args.impact_dtype,
+            quantizer=index.quantizer,
+            source_fingerprint=index.fingerprint(),
+            overwrite=args.overwrite,
+        )
+        print(f"saved {spath} ({args.shards} range shards)")
+    return 0
+
+
+def _inspect(args: argparse.Namespace) -> int:
+    manifest = artifact.read_manifest(args.path)
+    if args.json:
+        json.dump(manifest, sys.stdout, indent=1, sort_keys=True)
+        print()
+        return 0
+
+    kind = manifest["kind"]
+    print(f"{args.path}: {kind} (format v{manifest['format_version']})")
+    if kind == "clustered_index":
+        q = manifest["quantizer"]
+        print(
+            f"  {manifest['n_docs']} docs, {manifest['n_terms']} terms, "
+            f"{manifest['arrangement']['n_ranges']} ranges "
+            f"({manifest['arrangement']['strategy']}), "
+            f"{q['bits']}-bit impacts stored as {manifest['impact_dtype']}"
+        )
+        print(f"  fingerprint {manifest['fingerprint']}")
+        rows = manifest["arrays"].items()
+    else:
+        print(
+            f"  {manifest['n_shards']} shards, impacts stored as "
+            f"{manifest['impact_dtype']}"
+        )
+        rows = [
+            (f"shard_{r['shard_id']}/{n}", m)
+            for r in manifest["shards"]
+            for n, m in r["arrays"].items()
+        ]
+    print(f"  {'array':<28}{'dtype':<8}{'shape':<18}bytes")
+    total = 0
+    for name, meta in rows:
+        nbytes = os.path.getsize(os.path.join(args.path, meta["file"]))
+        total += nbytes
+        print(f"  {name:<28}{meta['dtype']:<8}{str(meta['shape']):<18}{nbytes}")
+    print(f"  on-disk total: {total / 1e6:.2f} MB")
+
+    if kind == "clustered_index":
+        # Manifest metadata alone — no array is read, so inspect stays
+        # cheap on collection-scale artifacts.
+        from repro.core.clustered_index import device_bytes_report
+
+        dev = device_bytes_report(
+            nnz=manifest["arrays"]["docs"]["shape"][0],
+            n_blocks=manifest["arrays"]["blk_start"]["shape"][0],
+            n_terms=manifest["n_terms"],
+            n_ranges=manifest["arrangement"]["n_ranges"],
+            impact_dtype=manifest["impact_dtype"],
+        )
+        print(
+            f"  device (HBM) at {manifest['impact_dtype']}: "
+            f"postings={dev['postings']} B (docs={dev['docs']}, "
+            f"impacts={dev['impacts']}), total={dev['total']} B"
+        )
+    return 0
+
+
+def _validate(args: argparse.Namespace) -> int:
+    problems = artifact.validate_artifact(args.path)
+    if problems:
+        print(f"INVALID: {args.path}")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    print(f"OK: {args.path} validates (checksums, shapes, fingerprint)")
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.index_io", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    sub = parser.add_subparsers(dest="cmd", required=True)
+
+    b = sub.add_parser("build", help="ingest a corpus and save an index artifact")
+    b.add_argument("--out", required=True, help="artifact directory to create")
+    b.add_argument("--reader", default="synth",
+                   help="corpus reader (see repro.index_io.available_readers)")
+    b.add_argument("--source", default="",
+                   help="reader source: file path, or ir_datasets id")
+    b.add_argument("--impact-dtype", default="int8", choices=("int8", "int32"))
+    b.add_argument("--overwrite", action="store_true")
+    b.add_argument("--shards", type=int, default=0,
+                   help="also save a range-sharded artifact with N shards")
+    b.add_argument("--n-ranges", type=int, default=32)
+    b.add_argument("--strategy", default="clustered_bp")
+    b.add_argument("--bits", type=int, default=8)
+    b.add_argument("--seed", type=int, default=0)
+    b.add_argument("--max-docs", type=int, default=None,
+                   help="cap ingested documents (tsv/jsonl/ciff/ir_datasets)")
+    b.add_argument("--n-docs", type=int, default=8000, help="synth reader only")
+    b.add_argument("--n-terms", type=int, default=6000, help="synth reader only")
+    b.add_argument("--n-topics", type=int, default=16, help="synth reader only")
+    b.add_argument("--mean-doc-len", type=int, default=150, help="synth reader only")
+    b.set_defaults(fn=_build)
+
+    i = sub.add_parser("inspect", help="print manifest, arrays, space report")
+    i.add_argument("path")
+    i.add_argument("--json", action="store_true", help="dump raw manifest JSON")
+    i.set_defaults(fn=_inspect)
+
+    v = sub.add_parser("validate", help="deep-check an artifact (exit 1 if bad)")
+    v.add_argument("path")
+    v.set_defaults(fn=_validate)
+
+    args = parser.parse_args(argv)
+    try:
+        return args.fn(args)
+    except (
+        artifact.ArtifactError,
+        corpus_io.MissingDependencyError,
+        ValueError,  # bad build/reader parameters, malformed source lines
+        OSError,
+    ) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

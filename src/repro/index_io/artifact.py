@@ -1,0 +1,506 @@
+"""Versioned on-disk artifacts for built indexes (DESIGN.md §8).
+
+Layout — one directory per artifact:
+
+    <path>/
+      manifest.json            format version, build params, quantizer
+                               state, fingerprint, per-array metadata
+      arrays/<name>.npy        ClusteredIndex arrays (kind "clustered_index")
+      shard_00000/<name>.npy   per-shard arrays      (kind "index_shards")
+
+Every array is a plain ``.npy`` file so loading can be eager
+(``np.load``) or memory-mapped (``mmap_mode="r"``) without any format
+change. Impacts are persisted at the chosen ``impact_dtype``: ``"int32"``
+verbatim, or ``"int8"`` as the biased code ``impact - IMPACT_BIAS`` (the
+same convention the device upload path uses — ``core.range_daat
+.pack_impacts``). Loading always widens impacts back to exact int32 on the
+host, so ``ClusteredIndex.fingerprint()`` is stable across save/load at
+either dtype and traversal over a loaded artifact is bitwise identical to
+the in-memory build.
+
+Writes are atomic at directory granularity: arrays and manifest land in a
+``<path>.tmp`` staging directory that is renamed into place last, so a
+crashed save never leaves a half-artifact where a loader finds it.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import tempfile
+
+import numpy as np
+
+from repro.core.clustered_index import ClusteredIndex, IndexShard
+from repro.core.quantize import Quantizer
+from repro.core.range_daat import IMPACT_BIAS, IMPACT_DTYPES, pack_impacts
+from repro.core.reorder import Arrangement
+
+__all__ = [
+    "FORMAT",
+    "FORMAT_VERSION",
+    "ArtifactError",
+    "CorruptArtifactError",
+    "VersionMismatchError",
+    "load_index",
+    "load_shards",
+    "read_manifest",
+    "save_index",
+    "save_shards",
+    "validate_artifact",
+]
+
+FORMAT = "repro-index-artifact"
+FORMAT_VERSION = 1
+
+# ClusteredIndex fields persisted as arrays (arrangement flattened in).
+INDEX_ARRAYS = (
+    "ptr", "docs", "impacts",
+    "blk_start", "blk_len", "blk_maxdoc", "blk_maximp", "blk_term", "blk_range",
+    "tr_ptr", "tr_range", "tr_blk_start", "tr_blk_end", "tr_bound",
+    "term_bound", "bounds_dense",
+    "doc_order", "range_ends",
+)
+
+SHARD_ARRAYS = (
+    "docs", "impacts", "blk_start", "blk_len", "blk_maxdoc", "blk_maximp",
+    "blk_map", "range_starts", "range_sizes", "bounds_dense",
+)
+
+SHARD_SCALARS = ("shard_id", "range_lo", "range_hi", "doc_base", "n_docs", "postings")
+
+
+class ArtifactError(Exception):
+    """Base error for index artifact I/O."""
+
+
+class CorruptArtifactError(ArtifactError):
+    """Manifest unreadable, arrays missing, or metadata contradicts data."""
+
+
+class VersionMismatchError(ArtifactError):
+    """Artifact was written by an incompatible format version."""
+
+
+# --------------------------------------------------------------------------
+# Low-level helpers
+# --------------------------------------------------------------------------
+
+
+def _sha256_file(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def _write_array(root: str, rel: str, arr: np.ndarray) -> dict:
+    path = os.path.join(root, rel)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    np.save(path, np.ascontiguousarray(arr))
+    return {
+        "file": rel,
+        "dtype": str(arr.dtype),
+        "shape": list(arr.shape),
+        "sha256": _sha256_file(path),
+    }
+
+
+def _read_array(root: str, meta: dict, name: str, mmap: bool) -> np.ndarray:
+    path = os.path.join(root, meta["file"])
+    if not os.path.exists(path):
+        raise CorruptArtifactError(f"array {name!r}: missing file {meta['file']}")
+    try:
+        arr = np.load(path, mmap_mode="r" if mmap else None, allow_pickle=False)
+    except (ValueError, OSError) as e:
+        raise CorruptArtifactError(f"array {name!r}: unreadable ({e})") from e
+    if str(arr.dtype) != meta["dtype"] or list(arr.shape) != list(meta["shape"]):
+        raise CorruptArtifactError(
+            f"array {name!r}: manifest says {meta['dtype']}{meta['shape']}, "
+            f"file holds {arr.dtype}{list(arr.shape)}"
+        )
+    return arr
+
+
+def _pack_disk_impacts(impacts: np.ndarray, impact_dtype: str, bits: int) -> np.ndarray:
+    """Disk uses the same representation the device upload path does
+    (``pack_impacts``); this wrapper only adds the bit-width eligibility
+    check, so the two conventions cannot drift apart."""
+    if impact_dtype == "int8" and bits > 8:
+        raise ValueError(f"impact_dtype='int8' needs quantizer.bits <= 8, got {bits}")
+    return pack_impacts(impacts, impact_dtype)
+
+
+def _unpack_disk_impacts(arr: np.ndarray, manifest: dict) -> np.ndarray:
+    if manifest["impact_dtype"] == "int8":
+        bias = int(manifest.get("impact_bias", IMPACT_BIAS))
+        return (np.asarray(arr, np.int64) + bias).astype(np.int32)
+    return np.asarray(arr, np.int32)
+
+
+def _staging_dir(path: str) -> str:
+    """Unique per-save staging directory beside the target.
+
+    Unique (not a fixed ``<path>.tmp``) so concurrent saves of the same
+    artifact — e.g. two processes missing the same ``build_index_cached``
+    key — cannot clobber each other's half-written staging area; whoever
+    publishes last simply wins the final rename.
+    """
+    parent = os.path.dirname(os.path.abspath(path))
+    os.makedirs(parent, exist_ok=True)
+    return tempfile.mkdtemp(prefix=os.path.basename(path) + ".tmp-", dir=parent)
+
+
+def _atomic_publish(tmp: str, path: str, overwrite: bool) -> None:
+    """Rename the staging dir into place without a half-deleted window.
+
+    Overwrite swaps in two renames — live artifact aside to a private
+    name, staging dir in, old tree dropped last — so a concurrent reader
+    observes the complete old artifact, a briefly-absent path (a cache
+    *miss*, which rebuilds), or the complete new artifact; never a
+    partially deleted directory. A lost publish race leaves the winner's
+    equivalent artifact in place.
+    """
+    old = None
+    if os.path.exists(path):
+        if not overwrite:
+            shutil.rmtree(tmp)
+            raise ArtifactError(f"artifact already exists: {path} (overwrite=False)")
+        old = tmp + ".old"  # unique: tmp is mkdtemp-fresh
+        try:
+            os.replace(path, old)
+        except FileNotFoundError:
+            old = None  # a concurrent publisher already swapped it away
+    try:
+        os.replace(tmp, path)
+    except OSError:
+        # Lost a publish race; the winner's artifact is equivalent.
+        shutil.rmtree(tmp, ignore_errors=True)
+        if not os.path.isdir(path):
+            raise
+    if old is not None:
+        shutil.rmtree(old, ignore_errors=True)
+
+
+def _write_manifest(root: str, manifest: dict) -> None:
+    with open(os.path.join(root, "manifest.json"), "w", encoding="utf-8") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+
+
+def read_manifest(path: str) -> dict:
+    """Load and version-check an artifact manifest.
+
+    Raises ``CorruptArtifactError`` for unreadable/foreign JSON and
+    ``VersionMismatchError`` when the format version is not ours.
+    """
+    mpath = os.path.join(path, "manifest.json")
+    if not os.path.exists(mpath):
+        raise CorruptArtifactError(f"no manifest.json under {path}")
+    try:
+        with open(mpath, encoding="utf-8") as f:
+            manifest = json.load(f)
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise CorruptArtifactError(f"manifest.json unparseable: {e}") from e
+    if not isinstance(manifest, dict) or manifest.get("format") != FORMAT:
+        raise CorruptArtifactError(
+            f"{mpath} is not a {FORMAT} manifest "
+            f"(format={manifest.get('format') if isinstance(manifest, dict) else None!r})"
+        )
+    version = manifest.get("format_version")
+    if version != FORMAT_VERSION:
+        raise VersionMismatchError(
+            f"artifact format_version={version!r}, this reader supports "
+            f"{FORMAT_VERSION} — rebuild the artifact or upgrade the reader"
+        )
+    return manifest
+
+
+# --------------------------------------------------------------------------
+# ClusteredIndex save / load
+# --------------------------------------------------------------------------
+
+
+def _index_array(index: ClusteredIndex, name: str) -> np.ndarray:
+    if name == "doc_order":
+        return index.arrangement.doc_order
+    if name == "range_ends":
+        return index.arrangement.range_ends
+    return getattr(index, name)
+
+
+def save_index(
+    index: ClusteredIndex,
+    path: str,
+    impact_dtype: str = "int32",
+    build_params: dict | None = None,
+    overwrite: bool = False,
+) -> str:
+    """Persist a built index as a versioned artifact directory.
+
+    ``impact_dtype="int8"`` stores postings impacts as biased int8 codes
+    (4x smaller than int32); every other array keeps its native dtype.
+    Returns ``path``.
+    """
+    tmp = _staging_dir(path)
+    try:
+        return _save_index_into(tmp, index, path, impact_dtype, build_params, overwrite)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)  # no orphaned staging dirs
+        raise
+
+
+def _save_index_into(
+    tmp: str,
+    index: ClusteredIndex,
+    path: str,
+    impact_dtype: str,
+    build_params: dict | None,
+    overwrite: bool,
+) -> str:
+    arrays = {}
+    for name in INDEX_ARRAYS:
+        arr = _index_array(index, name)
+        if name == "impacts":
+            arr = _pack_disk_impacts(arr, impact_dtype, index.quantizer.bits)
+        arrays[name] = _write_array(tmp, os.path.join("arrays", f"{name}.npy"), arr)
+
+    manifest = {
+        "format": FORMAT,
+        "format_version": FORMAT_VERSION,
+        "kind": "clustered_index",
+        "n_docs": int(index.n_docs),
+        "n_terms": int(index.n_terms),
+        "impact_dtype": impact_dtype,
+        "quantizer": {
+            "bits": int(index.quantizer.bits),
+            "scale": float(index.quantizer.scale),
+        },
+        "arrangement": {
+            "strategy": index.arrangement.strategy,
+            "n_ranges": int(index.n_ranges),
+        },
+        "build_params": build_params or {},
+        "fingerprint": index.fingerprint(),
+        "arrays": arrays,
+    }
+    if impact_dtype == "int8":
+        manifest["impact_bias"] = IMPACT_BIAS
+    _write_manifest(tmp, manifest)
+    _atomic_publish(tmp, path, overwrite)
+    return path
+
+
+def load_index(path: str, mmap: bool = False) -> ClusteredIndex:
+    """Load a ``clustered_index`` artifact back into host memory.
+
+    ``mmap=True`` memory-maps every array read-only instead of copying it —
+    int8-stored impacts are the one exception, since they are widened back
+    to exact int32 for the host structure (the device upload re-narrows via
+    ``Engine(impact_dtype="int8")``).
+    """
+    manifest = read_manifest(path)
+    if manifest.get("kind") != "clustered_index":
+        raise CorruptArtifactError(
+            f"expected kind 'clustered_index', got {manifest.get('kind')!r}"
+        )
+    metas = manifest.get("arrays", {})
+    missing = [n for n in INDEX_ARRAYS if n not in metas]
+    if missing:
+        raise CorruptArtifactError(f"manifest lacks arrays: {missing}")
+    a = {n: _read_array(path, metas[n], n, mmap) for n in INDEX_ARRAYS}
+    a["impacts"] = _unpack_disk_impacts(a["impacts"], manifest)
+
+    q = manifest["quantizer"]
+    arrangement = Arrangement(
+        doc_order=a["doc_order"],
+        range_ends=a["range_ends"],
+        strategy=manifest["arrangement"]["strategy"],
+    )
+    index = ClusteredIndex(
+        n_docs=int(manifest["n_docs"]),
+        n_terms=int(manifest["n_terms"]),
+        arrangement=arrangement,
+        quantizer=Quantizer(bits=int(q["bits"]), scale=float(q["scale"])),
+        **{n: a[n] for n in INDEX_ARRAYS if n not in ("doc_order", "range_ends")},
+    )
+    if index.fingerprint() != manifest["fingerprint"]:
+        raise CorruptArtifactError(
+            f"fingerprint mismatch: manifest {manifest['fingerprint']}, "
+            f"loaded arrays {index.fingerprint()}"
+        )
+    return index
+
+
+# --------------------------------------------------------------------------
+# IndexShard save / load
+# --------------------------------------------------------------------------
+
+
+def save_shards(
+    shards: list[IndexShard],
+    path: str,
+    impact_dtype: str = "int32",
+    quantizer: Quantizer | None = None,
+    source_fingerprint: str | None = None,
+    overwrite: bool = False,
+) -> str:
+    """Persist a shard set (``shard_device_index`` output) as one artifact.
+
+    One subdirectory per shard; scalar shard metadata lives in the
+    manifest. ``quantizer`` (the *global* scale shared by all shards) is
+    **required** for int8 storage — the bit width decides whether biased
+    int8 codes can represent every impact, and guessing would let >8-bit
+    impacts wrap silently. ``source_fingerprint`` records the fingerprint
+    of the index the shards were carved from, so loaders
+    (``ShardedEngine.from_artifact``) can refuse a stale shard set.
+    """
+    if not shards:
+        raise ValueError("cannot save an empty shard list")
+    if impact_dtype == "int8" and quantizer is None:
+        raise ValueError(
+            "impact_dtype='int8' requires quantizer= (its bit width decides "
+            "whether impacts fit a biased int8 code)"
+        )
+    bits = quantizer.bits if quantizer is not None else 32
+    tmp = _staging_dir(path)
+    try:
+        return _save_shards_into(
+            tmp, shards, path, impact_dtype, bits, quantizer,
+            source_fingerprint, overwrite,
+        )
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)  # no orphaned staging dirs
+        raise
+
+
+def _save_shards_into(
+    tmp: str,
+    shards: list[IndexShard],
+    path: str,
+    impact_dtype: str,
+    bits: int,
+    quantizer: Quantizer | None,
+    source_fingerprint: str | None,
+    overwrite: bool,
+) -> str:
+    shard_rows = []
+    for shard in shards:
+        sdir = f"shard_{shard.shard_id:05d}"
+        arrays = {}
+        for name in SHARD_ARRAYS:
+            arr = getattr(shard, name)
+            if name == "impacts":
+                arr = _pack_disk_impacts(arr, impact_dtype, bits)
+            arrays[name] = _write_array(tmp, os.path.join(sdir, f"{name}.npy"), arr)
+        row = {s: int(getattr(shard, s)) for s in SHARD_SCALARS}
+        row["arrays"] = arrays
+        shard_rows.append(row)
+
+    manifest = {
+        "format": FORMAT,
+        "format_version": FORMAT_VERSION,
+        "kind": "index_shards",
+        "n_shards": len(shards),
+        "impact_dtype": impact_dtype,
+        "shards": shard_rows,
+    }
+    if impact_dtype == "int8":
+        manifest["impact_bias"] = IMPACT_BIAS
+    if quantizer is not None:
+        manifest["quantizer"] = {
+            "bits": int(quantizer.bits),
+            "scale": float(quantizer.scale),
+        }
+    if source_fingerprint is not None:
+        manifest["source_fingerprint"] = source_fingerprint
+    _write_manifest(tmp, manifest)
+    _atomic_publish(tmp, path, overwrite)
+    return path
+
+
+def load_shards(path: str, mmap: bool = False) -> list[IndexShard]:
+    """Load an ``index_shards`` artifact back into ``IndexShard`` objects."""
+    manifest = read_manifest(path)
+    if manifest.get("kind") != "index_shards":
+        raise CorruptArtifactError(
+            f"expected kind 'index_shards', got {manifest.get('kind')!r}"
+        )
+    rows = manifest.get("shards", [])
+    if len(rows) != manifest.get("n_shards"):
+        raise CorruptArtifactError(
+            f"manifest n_shards={manifest.get('n_shards')} but "
+            f"{len(rows)} shard entries"
+        )
+    shards = []
+    for row in rows:
+        metas = row["arrays"]
+        missing = [n for n in SHARD_ARRAYS if n not in metas]
+        if missing:
+            raise CorruptArtifactError(
+                f"shard {row.get('shard_id')}: manifest lacks arrays {missing}"
+            )
+        a = {
+            n: _read_array(path, metas[n], f"shard/{n}", mmap)
+            for n in SHARD_ARRAYS
+        }
+        a["impacts"] = _unpack_disk_impacts(a["impacts"], manifest)
+        shards.append(
+            IndexShard(**{s: int(row[s]) for s in SHARD_SCALARS}, **a)
+        )
+    return shards
+
+
+# --------------------------------------------------------------------------
+# Validation
+# --------------------------------------------------------------------------
+
+
+def _iter_array_metas(manifest: dict):
+    if manifest["kind"] == "clustered_index":
+        yield from manifest.get("arrays", {}).items()
+    else:
+        for row in manifest.get("shards", []):
+            for name, meta in row.get("arrays", {}).items():
+                yield f"shard_{row.get('shard_id')}/{name}", meta
+
+
+def validate_artifact(path: str) -> list[str]:
+    """Deep-check an artifact; returns a list of problems (empty = valid).
+
+    Verifies the manifest parses at our format version, every array file
+    exists with the advertised dtype/shape and sha256, and — for index
+    artifacts — that the arrays rebuild to the manifest's fingerprint
+    (``load_index`` enforces that too; here it lands in the report instead
+    of raising).
+    """
+    problems: list[str] = []
+    try:
+        manifest = read_manifest(path)
+    except ArtifactError as e:
+        return [str(e)]
+
+    for name, meta in _iter_array_metas(manifest):
+        fpath = os.path.join(path, meta["file"])
+        if not os.path.exists(fpath):
+            problems.append(f"{name}: missing file {meta['file']}")
+            continue
+        digest = _sha256_file(fpath)
+        if digest != meta["sha256"]:
+            problems.append(
+                f"{name}: sha256 mismatch (manifest {meta['sha256'][:12]}…, "
+                f"file {digest[:12]}…)"
+            )
+        try:
+            _read_array(path, meta, name, mmap=True)
+        except CorruptArtifactError as e:
+            problems.append(str(e))
+
+    if not problems and manifest["kind"] == "clustered_index":
+        try:
+            load_index(path, mmap=True)
+        except ArtifactError as e:
+            problems.append(str(e))
+    return problems

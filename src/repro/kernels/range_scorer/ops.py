@@ -14,8 +14,9 @@ import jax.numpy as jnp
 
 from repro.kernels.range_scorer import ref
 from repro.kernels.range_scorer.kernel import scatter_accumulate_pallas
+from repro.kernels.range_scorer.ref import IMPACT_BIAS  # noqa: F401 — re-export
 
-__all__ = ["score_blocks"]
+__all__ = ["IMPACT_BIAS", "score_blocks"]
 
 
 @functools.partial(jax.jit, static_argnames=("s_pad", "impl", "interpret"))

@@ -12,7 +12,13 @@ import jax.numpy as jnp
 
 BLOCK = 128  # postings per block; matches core.clustered_index.BLOCK
 
-__all__ = ["BLOCK", "gather_block_postings", "score_blocks_ref"]
+# Zero-point for native int8 impact storage (DESIGN.md §8): quantized
+# impacts live in [1, 2^b - 1] ⊆ [1, 255] for b <= 8, which overflows
+# signed int8, so the stored code is ``impact - IMPACT_BIAS`` ∈ [-127, 127]
+# and the gather widens with ``+ IMPACT_BIAS`` back into exact int32.
+IMPACT_BIAS = 128
+
+__all__ = ["BLOCK", "IMPACT_BIAS", "gather_block_postings", "score_blocks_ref"]
 
 
 def gather_block_postings(
@@ -36,6 +42,11 @@ def gather_block_postings(
     offs_c = jnp.clip(offs, 0, nnz - 1)
     d = post_docs[offs_c]
     v = post_imps[offs_c]
+    if post_imps.dtype == jnp.int8:
+        # Native int8 impact storage: codes are biased by IMPACT_BIAS so the
+        # widen is the only place the true impact is reconstructed — postings
+        # stay 1 B/posting in HBM (DESIGN.md §8).
+        v = v.astype(jnp.int32) + IMPACT_BIAS
     local = jnp.where(valid, d - range_start, -1).astype(jnp.int32)
     vals = jnp.where(valid, v, 0).astype(jnp.int32)
     return local.reshape(B * BLOCK), vals.reshape(B * BLOCK)

@@ -80,6 +80,18 @@ class BatchEngine:
         self.compiled_shapes: set[tuple[int, int]] = set()
         self.batches_run = 0
 
+    @classmethod
+    def from_artifact(
+        cls, path: str, spec: BucketSpec | None = None, **engine_kwargs
+    ) -> "BatchEngine":
+        """Serve a saved index artifact (DESIGN.md §8).
+
+        ``engine_kwargs`` pass through to ``core.range_daat.Engine``;
+        ``impact_dtype`` defaults to the artifact's stored dtype, so an
+        int8 artifact serves with int8 postings impacts in HBM.
+        """
+        return cls(Engine.from_artifact(path, **engine_kwargs), spec)
+
     # ------------------------------------------------------------- planning
     def plan(self, q_terms: np.ndarray) -> QueryPlan:
         return self.engine.plan(q_terms)

@@ -44,6 +44,7 @@ from repro.core.range_daat import (
     QueryPlan,
     device_traverse,
     merge_topk,
+    pack_impacts,
 )
 from repro.distributed.sharding import retrieval_mesh, shard_map
 from repro.serving.bucketing import (
@@ -299,13 +300,21 @@ class ShardedEngine:
         n_shards: int,
         use_mesh: bool | None = None,
         mesh_axis: str = "shard",
+        shards: list[IndexShard] | None = None,
     ):
         self.engine = engine
         self.k = engine.k
         self.s_pad = engine.s_pad
         self.impl = engine.impl
         self.interpret = engine.interpret
-        self.shards: list[IndexShard] = shard_device_index(engine.index, n_shards)
+        self.impact_dtype = engine.impact_dtype
+        if shards is None:
+            shards = shard_device_index(engine.index, n_shards)
+        elif len(shards) != n_shards:
+            raise ValueError(
+                f"preloaded shard count {len(shards)} != n_shards {n_shards}"
+            )
+        self.shards: list[IndexShard] = shards
         self.n_shards = len(self.shards)
         self.r_loc = np.asarray([sh.n_ranges for sh in self.shards], np.int64)
         self.r_max = int(self.r_loc.max())
@@ -314,10 +323,13 @@ class ShardedEngine:
             [sh.doc_base for sh in self.shards], np.int64
         )
 
-        def stack(field, pad=0):
-            arrs = [np.asarray(getattr(sh, field), np.int32) for sh in self.shards]
+        def stack(field, pad=0, arrs=None):
+            if arrs is None:
+                arrs = [
+                    np.asarray(getattr(sh, field), np.int32) for sh in self.shards
+                ]
             w = max((a.shape[0] for a in arrs), default=1) or 1
-            out = np.full((self.n_shards, w), pad, np.int32)
+            out = np.full((self.n_shards, w), pad, arrs[0].dtype if arrs else np.int32)
             for s, a in enumerate(arrs):
                 out[s, : a.shape[0]] = a
             return jnp.asarray(out)
@@ -325,9 +337,19 @@ class ShardedEngine:
         # bounds_dense is a planning-time structure; traversal reads bounds
         # via the plan tables, so the device mirror carries a placeholder
         # (the real shard-local bounds live on IndexShard.bounds_dense).
+        # Impacts upload at the engine's impact dtype — int8 keeps shard
+        # postings at 1 B/posting in HBM (DESIGN.md §8); padding lanes are
+        # never gathered (blocks only address real offsets), so the pad
+        # value is inert at either dtype.
         self.dix = DeviceIndex(
             docs=stack("docs"),
-            impacts=stack("impacts"),
+            impacts=stack(
+                "impacts",
+                arrs=[
+                    pack_impacts(sh.impacts, self.impact_dtype)
+                    for sh in self.shards
+                ],
+            ),
             blk_start=stack("blk_start"),
             blk_len=stack("blk_len"),
             blk_maximp=stack("blk_maximp"),
@@ -342,6 +364,52 @@ class ShardedEngine:
         self.mesh = retrieval_mesh(self.n_shards, mesh_axis) if use_mesh else None
         self._mesh_axis = mesh_axis
         self._mesh_fns: dict = {}
+
+    @classmethod
+    def from_artifact(
+        cls,
+        path: str,
+        n_shards: int,
+        shards_path: str | None = None,
+        use_mesh: bool | None = None,
+        mesh_axis: str = "shard",
+        **engine_kwargs,
+    ) -> "ShardedEngine":
+        """Build a sharded engine from saved artifacts (DESIGN.md §8).
+
+        ``path`` is a ``clustered_index`` artifact (the global planner
+        needs the full index); ``shards_path`` optionally names a saved
+        ``index_shards`` artifact to reuse instead of re-partitioning —
+        rejected when its recorded ``source_fingerprint`` does not match
+        the loaded index, so a stale shard set cannot silently serve
+        against a rebuilt index.
+        """
+        from repro import index_io  # local: index_io sits above serving
+
+        engine = Engine.from_artifact(path, **engine_kwargs)
+        shards = None
+        if shards_path is not None:
+            src = index_io.read_manifest(shards_path).get("source_fingerprint")
+            if src is None:
+                # An unverifiable shard set is as dangerous as a stale one:
+                # mismatched docid spaces serve garbage with no error. Use
+                # load_shards + ShardedEngine(shards=...) to bypass.
+                raise index_io.ArtifactError(
+                    f"shard artifact {shards_path} records no "
+                    f"source_fingerprint; re-save with "
+                    f"source_fingerprint=index.fingerprint()"
+                )
+            if src != engine.index.fingerprint():
+                raise index_io.ArtifactError(
+                    f"shard artifact {shards_path} was carved from index "
+                    f"{src}, but {path} has fingerprint "
+                    f"{engine.index.fingerprint()} — rebuild the shards"
+                )
+            shards = index_io.load_shards(shards_path)
+        return cls(
+            engine, n_shards, use_mesh=use_mesh, mesh_axis=mesh_axis,
+            shards=shards,
+        )
 
     # ------------------------------------------------------------- planning
     def plan(self, q_terms: np.ndarray) -> QueryPlan:
