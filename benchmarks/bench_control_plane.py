@@ -1,0 +1,167 @@
+"""Control plane: replica-group throughput and live-reshard availability.
+
+Two claims (DESIGN.md §9), over the same index and query log:
+
+  * **replicas** — q/s through the ``ControlPlane`` at 1 vs 2 replicas of a
+    2-shard engine. Execution path is reported per row: ``replica mesh``
+    when the runtime exposes >= replicas x shards devices (run standalone
+    with ``--mesh`` for a forced 4-device CPU mesh), else the wrapped
+    engine's fallback — on 1 CPU core the fallback rows measure replication
+    *overhead* (same math, same core), which is the honest number this
+    container can produce; mesh rows measure the speedup.
+
+  * **reshard availability** — queries served *during* a live staged
+    cutover (``start_reshard`` + ``drain_once`` interleaving) vs a
+    stop-the-world rebuild of the same new layout (carve + engine build +
+    warmup with the queue blocked). The live path keeps serving through
+    every step; the stop-the-world window serves zero.
+
+Small sizes honour ``REPRO_BENCH_SMALL=1`` (the CI headline job).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+# Standalone invocation: force a 4-device CPU mesh before jax initializes.
+if __name__ == "__main__" and "--mesh" in sys.argv and "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+
+BATCH = 16
+N_SHARDS = 2
+REPLICAS = (1, 2)
+
+
+def _build(small: bool):
+    from repro.core.range_daat import Engine
+    from repro.data.synth import make_corpus, make_query_log
+
+    if small:
+        corpus = make_corpus(n_docs=4000, n_terms=3000, n_topics=8,
+                             mean_doc_len=80, seed=0)
+        ql = make_query_log(corpus, n_queries=64, seed=7)
+        idx = common.build_index_cached(
+            corpus, cache_dir=common.CACHE, n_ranges=8, strategy="clustered",
+        )
+    else:
+        corpus = common.bench_corpus()
+        ql = common.bench_queries(corpus, n=96, seed=7)
+        idx = common.bench_index(corpus, "clustered_bp")
+    eng = Engine(idx, k=10)
+    return idx, eng, [ql.terms[i] for i in range(ql.n_queries)]
+
+
+def _serve_all(plane, queries, batch):
+    t0 = time.perf_counter()
+    served = plane.replay(queries, batch_size=batch)
+    wall = time.perf_counter() - t0
+    return len(served), wall
+
+
+def run(small: bool | None = None):
+    import jax
+
+    from repro.control import ControlPlane
+    from repro.core.clustered_index import shard_device_index
+    from repro.serving import BucketSpec, ShardedBatchEngine, ShardedEngine
+
+    if small is None:
+        small = os.environ.get("REPRO_BENCH_SMALL") == "1"
+    idx, eng, queries = _build(small)
+    n = len(queries)
+    spec = BucketSpec(max_batch=BATCH)
+    rows = []
+
+    # ---------------------------------------------------- replica throughput
+    for n_rep in REPLICAS:
+        need = n_rep * N_SHARDS
+        plane = ControlPlane(
+            eng, n_shards=N_SHARDS, n_replicas=n_rep, spec=spec,
+            use_mesh=None if jax.device_count() >= need else False,
+        )
+        if plane.stats()["replica_mesh"]:
+            path = "replica mesh"
+        elif plane.sengine.mesh is not None:
+            path = "shard mesh"
+        else:
+            path = "vmap fallback"
+        plane.replay(queries[: 2 * BATCH], batch_size=BATCH)  # warm programs
+        served, wall = _serve_all(plane, queries, BATCH)
+        rows.append({
+            "bench": "control_plane",
+            "mode": f"replicas-{n_rep}",
+            "path": path,
+            "shards": N_SHARDS,
+            "replicas": n_rep,
+            "batch": BATCH,
+            "served": served,
+            "qps": round(served / wall, 2),
+        })
+
+    # ------------------------------------------------- reshard availability
+    plane = ControlPlane(
+        eng, n_shards=N_SHARDS, spec=spec,
+        use_mesh=None if jax.device_count() >= N_SHARDS else False,
+    )
+    plane.replay(queries[: 2 * BATCH], batch_size=BATCH)  # warm
+    R = idx.n_ranges
+    live_cuts = plane.cuts
+    # A genuinely different layout: move the middle boundary by one range.
+    mid = int(live_cuts[1])
+    new_cuts = np.asarray([0, mid + 1 if mid + 1 < R else mid - 1, R])
+
+    # Live: interleave one micro-batch per cutover step, then keep serving.
+    qi = 0
+    task = plane.start_reshard(new_cuts)
+    t0 = time.perf_counter()
+    served_live = 0
+    while plane.reshard_task is not None:
+        for _ in range(BATCH):
+            plane.submit(queries[qi % n])
+            qi += 1
+        served_live += len(plane.drain_once())
+    live_window = time.perf_counter() - t0
+    rows.append({
+        "bench": "control_plane",
+        "mode": "reshard-live",
+        "path": "staged cutover",
+        "served_during": served_live,
+        "window_s": round(live_window, 4),
+        "qps_during": round(served_live / max(live_window, 1e-9), 2),
+        "steps": task.steps_done,
+    })
+
+    # Stop-the-world: rebuild + warm the same layout with the queue blocked.
+    t0 = time.perf_counter()
+    shards = shard_device_index(idx, cuts=new_cuts)
+    se = ShardedEngine(
+        eng, N_SHARDS, use_mesh=False, shards=shards
+    )
+    sbeng = ShardedBatchEngine(se, spec)
+    widths = sorted({spec.width_bucket(eng.plan(q).blk_tab.shape[1])
+                     for q in queries[:BATCH]})
+    sbeng.warmup(widths)
+    stw_window = time.perf_counter() - t0
+    rows.append({
+        "bench": "control_plane",
+        "mode": "reshard-stop-the-world",
+        "path": "full rebuild",
+        "served_during": 0,
+        "window_s": round(stw_window, 4),
+        "qps_during": 0.0,
+    })
+
+    common.save_result("control_plane", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run(small="--small" in sys.argv):
+        print(row)

@@ -3,11 +3,17 @@
 Prints ``name,us_per_call,derived`` CSV per the repo contract, where
 us_per_call is the benchmark's headline per-query latency (microseconds)
 where latency is meaningful, and ``derived`` carries the headline claim
-metric. Full rows land in benchmarks/results/*.json for EXPERIMENTS.md.
+metric. Full rows land in benchmarks/results/*.json for EXPERIMENTS.md,
+and the per-run headline summary lands in a top-level ``BENCH_<id>.json``
+(id = ``$BENCH_ID``, else the git short sha, else a timestamp) — the
+perf-trajectory artifact CI uploads per commit.
 """
 
 from __future__ import annotations
 
+import json
+import os
+import subprocess
 import sys
 import time
 import traceback
@@ -26,6 +32,7 @@ MODULES = [
     ("S1_batch_serving", "benchmarks.bench_batch_serving"),
     ("S2_sharded_serving", "benchmarks.bench_sharded_serving"),
     ("S3_index_io", "benchmarks.bench_index_io"),
+    ("S4_control_plane", "benchmarks.bench_control_plane"),
     ("T8_failures", "benchmarks.bench_failures"),
     ("Q_quantization", "benchmarks.bench_quantization"),
 ]
@@ -98,6 +105,15 @@ def _headline(name: str, rows) -> tuple[float, str]:
                 f"_hbm_impacts={r8['hbm_impacts_ratio_vs_int32']}x"
                 f"_parity={r8['parity_bitwise']}",
             )
+        if name == "S4_control_plane":
+            r2 = next(x for x in rows if x["mode"] == "replicas-2")
+            live = next(x for x in rows if x["mode"] == "reshard-live")
+            return (
+                1e6 / max(r2["qps"], 1e-9),
+                f"qps_1rep={next(x for x in rows if x['mode'] == 'replicas-1')['qps']}"
+                f"_2rep={r2['qps']}_reshard_qps={live['qps_during']}"
+                f"_served_during={live['served_during']}",
+            )
         if name == "Q_quantization":
             r8 = next(x for x in rows if x["bits"] == 8)
             r4 = next(x for x in rows if x["bits"] == 4)
@@ -114,12 +130,49 @@ def _headline(name: str, rows) -> tuple[float, str]:
     return 0.0, "see_json"
 
 
+def _bench_id() -> str:
+    """Stable id for this run's BENCH_<id>.json: env, git sha, or time."""
+    env = os.environ.get("BENCH_ID")
+    if env:
+        return env
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip()
+        if sha:
+            return sha
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return time.strftime("%Y%m%d-%H%M%S")
+
+
+def write_headline_file(headlines: dict, failures: list) -> str:
+    """Write the top-level BENCH_<id>.json perf-trajectory snapshot."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    rid = _bench_id()
+    path = os.path.join(root, f"BENCH_{rid}.json")
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(
+            {
+                "id": rid,
+                "unix_time": int(time.time()),
+                "headlines": headlines,
+                "failures": failures,
+            },
+            f, indent=1, sort_keys=True,
+        )
+    return path
+
+
 def main() -> None:
     import importlib
 
     only = sys.argv[1:] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")
     failures = []
+    headlines = {}
     for name, module in MODULES:
         if only and not any(o in name for o in only):
             continue
@@ -129,11 +182,15 @@ def main() -> None:
             rows = mod.run()
             us, derived = _headline(name, rows)
             print(f"{name},{us:.1f},{derived}", flush=True)
+            headlines[name] = {"us_per_call": round(us, 1), "derived": derived}
         except Exception as e:  # noqa: BLE001
             traceback.print_exc()
             print(f"{name},nan,FAILED:{type(e).__name__}", flush=True)
             failures.append(name)
         sys.stderr.write(f"# {name} took {time.time()-t0:.1f}s\n")
+    if headlines or failures:
+        path = write_headline_file(headlines, failures)
+        sys.stderr.write(f"# headline trajectory -> {path}\n")
     if failures:
         sys.exit(1)
 

@@ -1,0 +1,347 @@
+"""The anytime serving control plane (DESIGN.md §9).
+
+``ControlPlane`` sits above the §3/§4 serving stack and owns the pieces
+that have to outlive any single engine: the request queue, the health
+ledger, the reshard planner, and the live engine pointer. One object, four
+cooperating behaviours:
+
+  * **serving** — a ``MicroBatchServer`` loop (submit / drain) over the
+    live engine: a ``ReplicaGroupEngine`` when replicas are configured and
+    healthy, the plain ``ShardedEngine`` path otherwise;
+  * **budgeting** — a ``ShardedSlaBudgeter`` in BoundSum mode by default:
+    each query's postings budget concentrates on the shards whose ranges
+    can actually score for its terms;
+  * **failover** — ``mark_down``/``mark_up`` drive the ledger; dead shards
+    get zero-budget dispatch slots so every query still returns, with
+    ``exact=False`` and a ``fidelity_bound`` widened by the dead shard's
+    unprocessed BoundSum mass; recovery is automatic on ``mark_up``;
+  * **reshard** — the planner watches per-shard load EWMAs fed by the
+    serving loop; ``maybe_reshard`` (or an explicit ``start_reshard``)
+    opens a staged ``ReshardTask`` whose ``step()`` runs between
+    micro-batches, and the engine pointer swaps only when the successor is
+    built and warm — serving never pauses, and post-cutover results are
+    bitwise-equal to a fresh build at the new layout.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.control.health import HealthLedger
+from repro.control.replica import ReplicaGroupEngine
+from repro.control.reshard import ReshardPlanner, ReshardTask
+from repro.core.clustered_index import range_postings_mass
+from repro.core.range_daat import Engine
+from repro.serving.bucketing import BucketSpec
+from repro.serving.microbatch import MicroBatchServer, ShardedSlaBudgeter
+from repro.serving.sharded import ShardedBatchEngine, ShardedEngine
+
+__all__ = ["ControlPlane"]
+
+
+class _PlaneServer(MicroBatchServer):
+    """MicroBatchServer whose dispatch and feedback route via the plane."""
+
+    def __init__(self, plane: "ControlPlane", **kwargs):
+        super().__init__(plane.bengine, plane.budgeter, **kwargs)
+        self.plane = plane
+
+    def _run_batch(self, plans, budgets):
+        return self.plane._dispatch(plans, budgets)
+
+    def _observe(self, batch_ms, results):
+        self.plane._observe(batch_ms, results)
+
+
+class ControlPlane:
+    """Replicated, reshardable, failure-tolerant anytime serving.
+
+    ``n_replicas > 1`` builds a ``ReplicaGroupEngine`` over a
+    (data x shard) mesh when the runtime has the devices (``use_mesh``
+    as in ``ShardedEngine``: None = auto). ``budget_mode`` picks the
+    ``ShardedSlaBudgeter`` allocation ("boundsum" default, "rate" for the
+    §4 behaviour). ``sla_ms=inf`` serves unbudgeted (every query runs to
+    safe/exhausted completion) — the mode the bitwise tests pin.
+    """
+
+    def __init__(
+        self,
+        engine: Engine,
+        n_shards: int,
+        n_replicas: int = 1,
+        sla_ms: float = float("inf"),
+        spec: BucketSpec | None = None,
+        use_mesh: bool | None = None,
+        budget_mode: str = "boundsum",
+        reshard_trigger: float = 1.25,
+        budgeter: ShardedSlaBudgeter | None = None,
+        max_batch: int | None = None,
+        clock=time.perf_counter,
+    ):
+        self.engine = engine
+        self.n_replicas = n_replicas
+        self.spec = spec or BucketSpec()
+        self._use_mesh = use_mesh
+        self.health = HealthLedger(n_shards, n_replicas)
+        self._install(ShardedEngine(engine, n_shards, use_mesh=use_mesh))
+        self.budgeter = budgeter or ShardedSlaBudgeter(
+            sla_ms=sla_ms,
+            n_shards=n_shards,
+            mode=budget_mode,
+            shard_mass=self._shard_mass,
+        )
+        self.planner = ReshardPlanner(
+            range_mass=range_postings_mass(engine.index),
+            cuts=self.sengine.cuts,
+            trigger=reshard_trigger,
+        )
+        self.reshard_task: ReshardTask | None = None
+        self.reshards_completed = 0
+        self.batches_served = 0
+        self.queries_served = 0
+        self.queries_served_during_reshard = 0
+        self.server = _PlaneServer(self, max_batch=max_batch, clock=clock)
+
+    # ----------------------------------------------------------- installing
+    def _install(self, sengine: ShardedEngine) -> None:
+        """Point the plane at a (new) sharded engine + its replica group."""
+        self.sengine = sengine
+        self.replicas = (
+            ReplicaGroupEngine(sengine, self.n_replicas, use_mesh=self._use_mesh)
+            if self.n_replicas > 1
+            else None
+        )
+        self.bengine = ShardedBatchEngine(self.replicas or sengine, self.spec)
+        self.bengine_single = (
+            ShardedBatchEngine(sengine, self.spec) if self.replicas else self.bengine
+        )
+
+    def _shard_mass(self, plan) -> np.ndarray:
+        # Late-bound so a reshard swap retargets budget shaping too.
+        return self.sengine.query_shard_mass(plan)
+
+    @property
+    def n_shards(self) -> int:
+        return self.sengine.n_shards
+
+    @property
+    def cuts(self) -> np.ndarray:
+        return self.sengine.cuts
+
+    # -------------------------------------------------------------- serving
+    def submit(self, q_terms: np.ndarray) -> int:
+        return self.server.submit(q_terms)
+
+    @property
+    def pending(self) -> int:
+        return self.server.pending
+
+    def drain_once(self):
+        """Serve one micro-batch, then advance any in-flight reshard.
+
+        The reshard step runs strictly *between* dispatches, so the queue
+        is never blocked behind cutover work; the swap happens here too,
+        once the successor engine reports ready.
+        """
+        served = self.server.drain_once()
+        self.batches_served += 1 if served else 0
+        self.queries_served += len(served)
+        if self.reshard_task is not None:
+            if served:
+                self.queries_served_during_reshard += len(served)
+            self.reshard_task.step()
+            if self.reshard_task.ready:
+                self._cutover()
+        return served
+
+    def replay(self, queries, batch_size: int | None = None):
+        """Offline replay through the plane's drain loop."""
+        bs = max(1, min(batch_size or self.server.max_batch, self.server.max_batch))
+        out = []
+        for lo in range(0, len(queries), bs):
+            for q in queries[lo : lo + bs]:
+                self.submit(q)
+            out.extend(self.drain_once())
+        while self.pending:
+            out.extend(self.drain_once())
+        return out
+
+    def _dispatch(self, plans, budgets):
+        down = self.health.shard_down_mask()
+        if (
+            self.replicas is not None
+            and self.health.n_healthy_replicas() < self.n_replicas
+        ):
+            # A degraded replica row cannot carry its slice of the batch;
+            # reroute through the single-replica path (same math, fewer
+            # devices) until the ledger clears — throughput, not fidelity.
+            beng = self.bengine_single
+        else:
+            beng = self.bengine
+        return beng.run_batch(
+            plans,
+            budget_postings=budgets,
+            down_mask=down if down.any() else None,
+        )
+
+    def _observe(self, batch_ms, results) -> None:
+        per_shard = np.sum([r.shard_postings for r in results], axis=0)
+        up = ~self.health.shard_down_mask()
+        self.budgeter.observe_sharded(
+            batch_ms, per_shard, len(results), active_mask=up
+        )
+        # The reshard planner only learns from a healthy fleet: a down
+        # shard's zero counters say nothing about where load lives, and
+        # would otherwise decay its EWMA until an outage armed a spurious
+        # (and wrong-direction) reshard.
+        if up.all():
+            self.planner.observe(per_shard, len(results))
+
+    # ------------------------------------------------------------- failover
+    def mark_down(self, shard: int, replica: int | None = None) -> None:
+        self.health.mark_down(shard, replica)
+
+    def mark_up(self, shard: int, replica: int | None = None) -> None:
+        self.health.mark_up(shard, replica)
+
+    # -------------------------------------------------------------- reshard
+    def maybe_reshard(self) -> bool:
+        """Open a staged reshard if the planner is armed; returns True then."""
+        if self.reshard_task is not None or not self.planner.should_reshard():
+            return False
+        self.start_reshard(self.planner.propose())
+        return True
+
+    def start_reshard(
+        self, cuts, shards_path: str | None = None, warm_widths=None
+    ) -> ReshardTask:
+        """Begin a live cutover to ``cuts``.
+
+        Source arrays are the live engine's shards, or — with
+        ``shards_path`` — a persisted ``index_io`` shard artifact, so a
+        reshard can be driven entirely from disk without the full index.
+        ``warm_widths`` pre-compiles those width buckets on the successor
+        before the swap (defaults to every width the live engine has seen).
+        """
+        if self.reshard_task is not None:
+            raise RuntimeError("a reshard is already in flight")
+        cuts = np.asarray(cuts, np.int64)
+        if np.array_equal(cuts, self.sengine.cuts):
+            raise ValueError(f"cuts {cuts.tolist()} are already the live layout")
+        if shards_path is not None:
+            from repro import index_io
+
+            src = index_io.read_manifest(shards_path).get("source_fingerprint")
+            if src is None:
+                # Same stance as ShardedEngine.from_artifact: an
+                # unverifiable shard set is as dangerous as a stale one —
+                # foreign arrays under the live planner serve garbage with
+                # no error. Re-save with source_fingerprint= to opt in.
+                raise index_io.ArtifactError(
+                    f"shard artifact {shards_path} records no "
+                    f"source_fingerprint; re-save with "
+                    f"source_fingerprint=index.fingerprint()"
+                )
+            if src != self.engine.index.fingerprint():
+                raise index_io.ArtifactError(
+                    f"shard artifact {shards_path} was carved from index "
+                    f"{src}, but the live index has fingerprint "
+                    f"{self.engine.index.fingerprint()} — refusing to "
+                    f"reshard from a stale layout"
+                )
+            source = index_io.load_shards(shards_path)
+        else:
+            source = self.sengine.shards
+        if warm_widths is None:
+            warm_widths = sorted({w for (_, w) in self.bengine.compiled_shapes})
+
+        def build(new_shards):
+            seng = ShardedEngine(
+                self.engine,
+                len(new_shards),
+                use_mesh=self._use_mesh,
+                shards=new_shards,
+            )
+            beng = ShardedBatchEngine(
+                ReplicaGroupEngine(seng, self.n_replicas, use_mesh=self._use_mesh)
+                if self.n_replicas > 1
+                else seng,
+                self.spec,
+            )
+            return seng, beng
+
+        self.reshard_task = ReshardTask(source, cuts, build, warm_widths)
+        return self.reshard_task
+
+    def _cutover(self) -> None:
+        """Atomic engine swap: the next micro-batch serves the new layout.
+
+        The task's engines were built and warmed off the serving path, so
+        the swap is pointer rebinding only. The health ledger resets —
+        shard indices now name different range bands — and the planner
+        adopts the new cuts with a fresh load EWMA.
+        """
+        task = self.reshard_task
+        assert task is not None and task.ready
+        self.sengine = task.sengine
+        self.bengine = task.bengine
+        self.replicas = task.bengine.sengine if self.n_replicas > 1 else None
+        self.bengine_single = (
+            ShardedBatchEngine(task.sengine, self.spec)
+            if self.n_replicas > 1
+            else task.bengine
+        )
+        self.server.bengine = self.bengine
+        self.health.reset(task.n_shards)
+        if self.budgeter.n_shards != task.n_shards:
+            # A cutover may change the shard count; re-seed the per-shard
+            # throughput EWMAs at the old mean so budgets stay sane.
+            self.budgeter.n_shards = task.n_shards
+            self.budgeter.rates = np.full(
+                task.n_shards, float(np.mean(self.budgeter.rates)), np.float64
+            )
+        self.planner.committed(task.cuts)
+        self.reshard_task = None
+        self.reshards_completed += 1
+
+    def save_shards(self, path: str, overwrite: bool = False) -> str:
+        """Persist the live shard layout as an ``index_io`` artifact.
+
+        Records the range cuts and the source index fingerprint, so a later
+        ``start_reshard(shards_path=...)`` — possibly in a fresh process —
+        can re-stack from disk and refuse a stale artifact.
+        """
+        from repro import index_io
+
+        return index_io.save_shards(
+            self.sengine.shards,
+            path,
+            quantizer=self.engine.index.quantizer,
+            source_fingerprint=self.engine.index.fingerprint(),
+            overwrite=overwrite,
+        )
+
+    # ---------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        """JSON-able operating snapshot for dashboards and benchmarks."""
+        return {
+            "n_shards": self.n_shards,
+            "n_replicas": self.n_replicas,
+            "cuts": self.sengine.cuts.tolist(),
+            "replica_mesh": bool(
+                self.replicas is not None and self.replicas.group_mesh is not None
+            ),
+            "health": self.health.snapshot(),
+            "load_ewma": self.planner.load.tolist(),
+            "imbalance": round(self.planner.imbalance(), 4),
+            "reshard_in_flight": (
+                self.reshard_task.stage if self.reshard_task else None
+            ),
+            "reshards_completed": self.reshards_completed,
+            "batches_served": self.batches_served,
+            "queries_served": self.queries_served,
+            "queries_served_during_reshard": self.queries_served_during_reshard,
+            "alpha": round(float(self.budgeter.policy.alpha), 4),
+        }

@@ -15,6 +15,7 @@ __all__ = [
     "data_spec",
     "shard_map",
     "axis_size",
+    "replica_mesh",
     "retrieval_mesh",
 ]
 
@@ -36,6 +37,33 @@ def retrieval_mesh(n_shards: int, axis: str = "shard") -> Mesh:
     if hasattr(jax, "make_mesh"):
         return jax.make_mesh((n_shards,), (axis,))
     return Mesh(np.asarray(jax.devices()[:n_shards]), (axis,))
+
+
+def replica_mesh(
+    n_replicas: int,
+    n_shards: int,
+    data_axis: str = "data",
+    shard_axis: str = "shard",
+) -> Mesh:
+    """2-D (data x shard) mesh for replicated shard groups (DESIGN.md §9).
+
+    Rows carry full index replicas (query parallelism over ``data_axis``),
+    columns carry range shards; needs ``n_replicas * n_shards`` devices.
+    """
+    need = n_replicas * n_shards
+    n_dev = jax.device_count()
+    if n_dev < need:
+        raise ValueError(
+            f"replica_mesh needs {n_replicas} x {n_shards} = {need} devices, "
+            f"have {n_dev}; set XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count before importing jax, or drop to 1 replica"
+        )
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh((n_replicas, n_shards), (data_axis, shard_axis))
+    return Mesh(
+        np.asarray(jax.devices()[:need]).reshape(n_replicas, n_shards),
+        (data_axis, shard_axis),
+    )
 
 
 def axis_size(name):

@@ -407,6 +407,15 @@ def _save_shards_into(
         "impact_dtype": impact_dtype,
         "shards": shard_rows,
     }
+    # Contiguous layouts additionally record their range cuts, so reshard
+    # tooling (repro.control, DESIGN.md §9) can read the layout without
+    # loading any array. Non-contiguous shard sets (not produced by
+    # shard_device_index) simply omit the key.
+    lows = sorted((s.range_lo, s.range_hi) for s in shards)
+    if lows[0][0] == 0 and all(
+        a[1] == b[0] for a, b in zip(lows, lows[1:])
+    ):
+        manifest["range_cuts"] = [lo for lo, _ in lows] + [lows[-1][1]]
     if impact_dtype == "int8":
         manifest["impact_bias"] = IMPACT_BIAS
     if quantizer is not None:

@@ -43,8 +43,13 @@ class SlaBudgeter:
     ema: float = 0.3
     floor: int = BLOCK  # always admit at least one block per query
 
-    def budgets(self, n: int) -> np.ndarray:
-        """[n] int32 postings budgets for the next batch."""
+    def budgets(self, n: int, plans=None) -> np.ndarray:
+        """[n] int32 postings budgets for the next batch.
+
+        ``plans`` is accepted (and ignored here) so callers can pass the
+        micro-batch's query plans uniformly; shard-aware budgeters use them
+        to shape per-shard allocations (DESIGN.md §9).
+        """
         cap = max(float(self.floor), self.rate * self.sla_ms / self.policy.alpha)
         cap = min(cap, float(2**31 - 1))  # inf SLA -> unbounded traversal
         return np.full(n, int(cap), dtype=np.int32)
@@ -68,33 +73,83 @@ class ShardedSlaBudgeter(SlaBudgeter):
     Reactive alpha (Eq. 7) scales all shards from end-to-end SLA feedback —
     the SLA is on the merged result, not on any single shard.
 
-    ``budgets(n)`` returns [n, n_shards]; feed observations through
+    Two allocation modes (DESIGN.md §9):
+
+      * ``mode="rate"`` — every query in the batch gets the same per-shard
+        caps, shaped only by the throughput EWMAs (the §4 behaviour);
+      * ``mode="boundsum"`` — each query's *total* postings budget (the sum
+        of the rate-mode caps) is re-divided across shards proportionally
+        to the per-shard BoundSum mass of that query's terms, obtained via
+        ``shard_mass`` (``ShardedEngine.query_shard_mass``). A shard whose
+        ranges cannot score for the query gets zero budget; the freed
+        postings concentrate where the score mass actually lives, which
+        tightens ``fidelity_bound`` under tight SLAs on skewed indexes.
+
+    ``budgets(n, plans)`` returns [n, n_shards]; feed observations through
     ``observe_sharded`` (per-shard postings) — ``MicroBatchServer`` does so
     automatically when results carry ``shard_postings``.
     """
 
     n_shards: int = 1
+    mode: str = "rate"  # "rate" | "boundsum"
+    shard_mass: object = None  # callable QueryPlan -> [n_shards] mass
 
     def __post_init__(self):
+        if self.mode not in ("rate", "boundsum"):
+            raise ValueError(f"mode {self.mode!r} not in ('rate', 'boundsum')")
+        if self.mode == "boundsum" and self.shard_mass is None:
+            raise ValueError(
+                "mode='boundsum' needs shard_mass= "
+                "(e.g. ShardedEngine.query_shard_mass)"
+            )
         self.rates = np.full(self.n_shards, self.rate, dtype=np.float64)
 
-    def budgets(self, n: int) -> np.ndarray:
-        """[n, n_shards] int32 per-(query, shard) postings budgets."""
+    def _rate_caps(self) -> np.ndarray:
         cap = np.maximum(
             float(self.floor), self.rates * self.sla_ms / self.policy.alpha
         )
-        cap = np.minimum(cap, float(2**31 - 1))
-        return np.tile(cap.astype(np.int64), (n, 1)).astype(np.int32)
+        return np.minimum(cap, float(2**31 - 1))
+
+    def budgets(self, n: int, plans=None) -> np.ndarray:
+        """[n, n_shards] int32 per-(query, shard) postings budgets."""
+        caps = self._rate_caps()
+        out = np.tile(caps.astype(np.int64), (n, 1))
+        unbounded = float(caps.max()) >= float(2**31 - 1)
+        if self.mode == "boundsum" and plans is not None and not unbounded:
+            total = float(caps.sum())
+            for i, plan in enumerate(plans):
+                mass = np.asarray(self.shard_mass(plan), np.float64)
+                if mass.sum() <= 0:
+                    continue  # no scoring shard at all: keep rate shares
+                split = np.ceil(total * mass / mass.sum())
+                # Scoring shards keep the one-block floor; zero-mass shards
+                # provably cannot contribute a document, so they get zero.
+                split = np.where(mass > 0, np.maximum(split, self.floor), 0)
+                out[i] = np.minimum(split, float(2**31 - 1)).astype(np.int64)
+        return np.clip(out, 0, 2**31 - 1).astype(np.int32)
 
     def observe_sharded(
-        self, elapsed_ms: float, shard_postings: np.ndarray, n: int
+        self,
+        elapsed_ms: float,
+        shard_postings: np.ndarray,
+        n: int,
+        active_mask: np.ndarray | None = None,
     ) -> None:
-        """Per-shard throughput EWMAs + shared Eq. (7) feedback on alpha."""
+        """Per-shard throughput EWMAs + shared Eq. (7) feedback on alpha.
+
+        ``active_mask`` ([n_shards] bool) freezes the EWMA of shards that
+        did no work for a structural reason (health-ledger down, DESIGN.md
+        §9) — otherwise an outage would drag the dead shard's rate to ~0
+        and starve it for many rounds after recovery.
+        """
         if elapsed_ms > 0 and n > 0:
             lane_rates = np.asarray(shard_postings, np.float64) / n / elapsed_ms
-            self.rates = (1 - self.ema) * self.rates + self.ema * np.maximum(
+            new = (1 - self.ema) * self.rates + self.ema * np.maximum(
                 lane_rates, 1e-6
             )
+            if active_mask is not None:
+                new = np.where(np.asarray(active_mask, bool), new, self.rates)
+            self.rates = new
         self.policy.on_query_end(elapsed_ms, self.sla_ms)
 
     def observe(self, elapsed_ms: float, total_postings: int, n: int) -> None:
@@ -146,21 +201,15 @@ class MicroBatchServer:
     def pending(self) -> int:
         return len(self._queue)
 
-    def drain_once(self) -> list[ServedQuery]:
-        """Serve one micro-batch from the head of the queue."""
-        if not self._queue:
-            return []
-        cut, self._queue = self._queue[: self.max_batch], self._queue[self.max_batch :]
-        rids = [c[0] for c in cut]
-        enq = [c[2] for c in cut]
-        plans = self.bengine.plan_many([c[1] for c in cut])
-        budgets = self.budgeter.budgets(len(plans))
+    def _run_batch(self, plans, budgets):
+        """One engine dispatch — the control plane's override point: the
+        ``ControlPlane`` routes through whichever engine is live and injects
+        the health ledger's down mask here (DESIGN.md §9)."""
+        return self.bengine.run_batch(plans, budget_postings=budgets)
 
-        t0 = self.clock()
-        results = self.bengine.run_batch(plans, budget_postings=budgets)
-        served_at = self.clock()
-        batch_ms = (served_at - t0) * 1e3
-
+    def _observe(self, batch_ms: float, results) -> None:
+        """Feed one served batch back to the budgeter (override point:
+        the control plane adds its health mask and reshard planner here)."""
         if hasattr(self.budgeter, "observe_sharded") and hasattr(
             results[0], "shard_postings"
         ):
@@ -170,6 +219,23 @@ class MicroBatchServer:
             self.budgeter.observe(
                 batch_ms, sum(r.postings for r in results), len(results)
             )
+
+    def drain_once(self) -> list[ServedQuery]:
+        """Serve one micro-batch from the head of the queue."""
+        if not self._queue:
+            return []
+        cut, self._queue = self._queue[: self.max_batch], self._queue[self.max_batch :]
+        rids = [c[0] for c in cut]
+        enq = [c[2] for c in cut]
+        plans = self.bengine.plan_many([c[1] for c in cut])
+        budgets = self.budgeter.budgets(len(plans), plans=plans)
+
+        t0 = self.clock()
+        results = self._run_batch(plans, budgets)
+        served_at = self.clock()
+        batch_ms = (served_at - t0) * 1e3
+
+        self._observe(batch_ms, results)
         return [
             ServedQuery(
                 rid=rid,

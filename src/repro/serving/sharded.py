@@ -37,7 +37,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.clustered_index import BLOCK, IndexShard, shard_device_index
+from repro.core.clustered_index import (
+    BLOCK,
+    IndexShard,
+    shard_cuts,
+    shard_device_index,
+)
 from repro.core.range_daat import (
     DeviceIndex,
     Engine,
@@ -59,6 +64,7 @@ __all__ = [
     "ShardedEngine",
     "ShardedBatchEngine",
     "ShardedResult",
+    "apply_down_mask",
     "sharded_batched_traverse",
     "shard_exit_reason",
 ]
@@ -152,6 +158,7 @@ def make_mesh_dispatch(
     prune_blocks: bool,
     impl: str,
     interpret: bool,
+    data_axis: str | None = None,
 ):
     """Compile the (batch x shard) step with one shard per mesh device.
 
@@ -160,6 +167,13 @@ def make_mesh_dispatch(
     wrapper and the broker merge is an ``all_gather`` + lexsort top-k inside
     the compiled program, so one dispatch serves the whole batch on all
     shards (DESIGN.md §4).
+
+    ``data_axis`` names a second mesh axis carrying query parallelism: the
+    batch dimension of every plan table, budget, and output is sharded over
+    it while the index arrays stay sharded over ``axis`` only (replicated
+    across replicas) — the replicated-shard-group layout of DESIGN.md §9.
+    The per-query math is untouched, so an N-replica dispatch is bitwise
+    identical to running the same queries on one replica.
     """
     from jax.sharding import PartitionSpec as P
 
@@ -214,20 +228,21 @@ def make_mesh_dispatch(
         range_starts=P(axis, None),
         range_sizes=P(axis, None),
     )
+    da = data_axis  # None -> batch replicated on every shard device (§4)
     fn = shard_map(
         body,
         mesh=mesh,
         in_specs=(
             dix_specs,
             P(axis),
-            P(None, axis, None, None),
-            P(None, axis, None, None),
-            P(None, axis, None),
-            P(None, axis, None),
-            P(None, axis),
-            P(None, axis),
+            P(da, axis, None, None),
+            P(da, axis, None, None),
+            P(da, axis, None),
+            P(da, axis, None),
+            P(da, axis),
+            P(da, axis),
         ),
-        out_specs=(P(), P(), P(), P(), P(), P(), P()),
+        out_specs=tuple(P(da) for _ in range(7)),
         check_vma=False,
     )
     return jax.jit(fn)
@@ -236,6 +251,33 @@ def make_mesh_dispatch(
 # --------------------------------------------------------------------------
 # Host-facing results
 # --------------------------------------------------------------------------
+
+
+def apply_down_mask(
+    budgets: np.ndarray, maxr: np.ndarray, down_mask
+) -> tuple[np.ndarray, np.ndarray]:
+    """Zero dead shards' budget columns so they exit before any work.
+
+    A down shard (health ledger, DESIGN.md §9) is given ``budget = 0`` and
+    ``max_ranges = 0``: the device while_loop exits at i=0 having processed
+    nothing, and every one of its ranges lands in the skipped-bounds
+    accounting — which is exactly the "unprocessed BoundSum mass" the
+    degraded fidelity bound must carry.
+    """
+    if down_mask is None:
+        return budgets, maxr
+    down = np.asarray(down_mask, bool)
+    if down.shape != (budgets.shape[-1],):
+        raise ValueError(
+            f"down_mask shape {down.shape} != ({budgets.shape[-1]},)"
+        )
+    if not down.any():
+        return budgets, maxr
+    budgets = np.array(budgets, copy=True)
+    maxr = np.array(maxr, copy=True)
+    budgets[..., down] = 0
+    maxr[..., down] = 0
+    return budgets, maxr
 
 
 def shard_exit_reason(safe: bool, budget: bool, rp: int, r_loc: int) -> str:
@@ -263,7 +305,7 @@ class ShardedResult(NamedTuple):
     shard_postings: np.ndarray  # [S] int64
     shard_blocks: np.ndarray  # [S] int64
     shard_ranges: np.ndarray  # [S] int64 ranges processed (<= r_loc)
-    shard_exit_reasons: tuple  # [S] of "safe" | "budget" | "exhausted"
+    shard_exit_reasons: tuple  # [S] of "safe" | "budget" | "exhausted" | "down"
     fidelity_bound: int  # max BoundSum over all unprocessed ranges (0 if none)
     exact: bool  # merged list provably equals the exhaustive top-k (see below)
 
@@ -316,6 +358,7 @@ class ShardedEngine:
             )
         self.shards: list[IndexShard] = shards
         self.n_shards = len(self.shards)
+        self.cuts = shard_cuts(self.shards)
         self.r_loc = np.asarray([sh.n_ranges for sh in self.shards], np.int64)
         self.r_max = int(self.r_loc.max())
         self.mass = np.asarray([sh.postings for sh in self.shards], np.int64)
@@ -446,6 +489,18 @@ class ShardedEngine:
                 order[s, rl:] = rl  # row rl is all -1: inert padding
         return blk, rest, order, bounds
 
+    def query_shard_mass(self, plan: QueryPlan) -> np.ndarray:
+        """[S] int64 per-shard BoundSum mass for this query's terms.
+
+        Sum of the plan's per-range BoundSums over each shard's range band —
+        the quantity shard-aware budget allocation splits postings budgets
+        by (DESIGN.md §9): a shard whose ranges cannot score for this query
+        carries zero mass and deserves none of its budget.
+        """
+        per_range = np.zeros(int(self.cuts[-1]), np.int64)
+        per_range[plan.order_host] = plan.bounds_host
+        return np.add.reduceat(per_range, self.cuts[:-1]).astype(np.int64)
+
     # -------------------------------------------------------------- budgets
     def split_postings_budget(self, budgets) -> np.ndarray:
         """[N] global postings budgets -> [N, S] proportional to shard mass.
@@ -521,20 +576,24 @@ class ShardedEngine:
         max_ranges=INT32_MAX,
         safe_stop: bool = True,
         prune_blocks: bool = True,
+        down_mask: np.ndarray | None = None,
     ) -> ShardedResult:
         """Single-query sharded traversal (a batch of one).
 
         Scalar budgets are split across shards proportionally; a length-S
-        sequence assigns per-shard budgets directly.
+        sequence assigns per-shard budgets directly. ``down_mask`` ([S]
+        bool) marks dead shards: they are assigned zero work and the result
+        degrades through the fidelity bound (DESIGN.md §9).
         """
         blk, rest, order, bounds = self.shard_plan(plan)
         bud = self._one_query_budget(budget_postings, self.split_postings_budget)
         mr = self._one_query_budget(max_ranges, self.split_range_budget)
+        bud, mr = apply_down_mask(bud, mr, down_mask)
         out = self.dispatch(
             blk[None], rest[None], order[None], bounds[None], bud, mr,
             safe_stop=safe_stop, prune_blocks=prune_blocks,
         )
-        return self._to_results(out, bounds[None])[0]
+        return self._to_results(out, bounds[None], down_mask=down_mask)[0]
 
     def _one_query_budget(self, value, split_fn) -> np.ndarray:
         arr = np.asarray(value, np.int64)
@@ -545,32 +604,46 @@ class ShardedEngine:
         return np.clip(arr, 0, INT32_MAX).astype(np.int32)[None]
 
     # --------------------------------------------------------------- unpack
-    def _to_results(self, out, bounds: np.ndarray) -> list[ShardedResult]:
+    def _to_results(
+        self, out, bounds: np.ndarray, down_mask: np.ndarray | None = None
+    ) -> list[ShardedResult]:
         """Device outputs + host bounds tables [N, S, R_max] -> results."""
         vals, ids, post, blocks, ranges, safe, budget = (np.asarray(x) for x in out)
+        down = (
+            np.zeros(self.n_shards, bool)
+            if down_mask is None
+            else np.asarray(down_mask, bool)
+        )
         results = []
         for n in range(vals.shape[0]):
             keep = ids[n] >= 0
             reasons = tuple(
-                shard_exit_reason(
+                "down"
+                if down[s]
+                else shard_exit_reason(
                     bool(safe[n, s]), bool(budget[n, s]),
                     int(ranges[n, s]), int(self.r_loc[s]),
                 )
                 for s in range(self.n_shards)
             )
-            # fb: fidelity loss attributable to the anytime knob (budget
-            # exits only — the §4 bound surfaced to callers). resid: max
-            # BoundSum over ALL skipped ranges, safe exits included, used
-            # for the exactness certificate below.
+            # fb: fidelity loss attributable to the anytime knob or to a
+            # dead shard (budget/down exits — the §4/§9 bound surfaced to
+            # callers). resid: max BoundSum over ALL skipped ranges, safe
+            # exits included, used for the exactness certificate below.
+            # down_resid: the dead shards' share of resid — degraded
+            # results are never certified exact while it is nonzero.
             fb = 0
             resid = 0
+            down_resid = 0
             for s in range(self.n_shards):
                 rp, rl = int(ranges[n, s]), int(self.r_loc[s])
                 if rp < rl:
                     r_bound = int(bounds[n, s, rp:rl].max())
                     resid = max(resid, r_bound)
-                    if reasons[s] == "budget":
+                    if reasons[s] in ("budget", "down"):
                         fb = max(fb, r_bound)
+                    if reasons[s] == "down":
+                        down_resid = max(down_resid, r_bound)
             # Exactness certificate, strict about tie-breaks: a doc in a
             # skipped range can score up to that range's BoundSum, and at
             # equal score a smaller docid displaces the k-th entry under the
@@ -580,10 +653,14 @@ class ShardedEngine:
             # shards and empty-for-query skipped ranges), or the list is
             # FULL and every skipped range is strictly below the k-th score.
             # With an under-filled list any unprocessed scoring doc belongs
-            # in the top-k, so fullness is required.
+            # in the top-k, so fullness is required. A down shard that could
+            # have scored (down_resid > 0) always degrades to exact=False —
+            # the deliberately conservative §9 contract, so operators can
+            # alarm on inexact answers during an outage.
             n_found = int(keep.sum())
-            exact = resid == 0 or (
-                n_found == self.k and resid < int(vals[n][keep][-1])
+            exact = down_resid == 0 and (
+                resid == 0
+                or (n_found == self.k and resid < int(vals[n][keep][-1]))
             )
             results.append(
                 ShardedResult(
@@ -633,12 +710,15 @@ class ShardedBatchEngine:
         max_ranges=None,
         safe_stop: bool = True,
         prune_blocks: bool = True,
+        down_mask: np.ndarray | None = None,
     ) -> list[ShardedResult]:
         """Traverse ``plans`` on all shards; results keep input order.
 
         Budgets may be None (unbounded), a scalar, an [n] per-query vector
         (split across shards proportionally), or an [n, S] matrix of
-        explicit per-(query, shard) caps.
+        explicit per-(query, shard) caps. ``down_mask`` ([S] bool) marks
+        dead shards; their queries degrade through ``fidelity_bound`` and
+        ``exact=False`` instead of failing (DESIGN.md §9).
         """
         n = len(plans)
         if n == 0:
@@ -649,12 +729,13 @@ class ShardedBatchEngine:
         maxr = self._per_query_shard(
             max_ranges, n, self.sengine.split_range_budget
         )
+        budgets, maxr = apply_down_mask(budgets, maxr, down_mask)
 
         results: list[ShardedResult | None] = [None] * n
         for width, chunk in iter_bucket_chunks(plans, self.spec):
             self._run_chunk(
                 [plans[i] for i in chunk], chunk, width, budgets, maxr,
-                safe_stop, prune_blocks, results,
+                safe_stop, prune_blocks, results, down_mask,
             )
         return results  # type: ignore[return-value]
 
@@ -673,7 +754,7 @@ class ShardedBatchEngine:
 
     def _run_chunk(
         self, chunk_plans, chunk_idx, width, budgets, maxr,
-        safe_stop, prune_blocks, results,
+        safe_stop, prune_blocks, results, down_mask=None,
     ) -> None:
         se = self.sengine
         batch = self.spec.batch_bucket(len(chunk_plans))
@@ -697,7 +778,7 @@ class ShardedBatchEngine:
         )
         self.compiled_shapes.add((batch, width))
         self.batches_run += 1
-        unpacked = se._to_results(out, bounds)
+        unpacked = se._to_results(out, bounds, down_mask=down_mask)
         for lane, qi in enumerate(chunk_idx):
             results[qi] = unpacked[lane]
 
