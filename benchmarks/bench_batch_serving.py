@@ -16,6 +16,7 @@ variant (per-query postings cap) shows the anytime knob under batching.
 
 from __future__ import annotations
 
+import os
 import sys
 import time
 
@@ -53,7 +54,9 @@ def _serve_batched(beng, plans, bs, budget=None):
     return times, time.perf_counter() - t0
 
 
-def run(small: bool = False):
+def run(small: bool | None = None):
+    if small is None:
+        small = os.environ.get("REPRO_BENCH_SMALL") == "1"
     if small:
         from repro.data.synth import make_corpus, make_query_log
 

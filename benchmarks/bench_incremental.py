@@ -1,0 +1,142 @@
+"""S5: incremental artifacts — append+publish vs full rebuild, chain reopen.
+
+Three claims (DESIGN.md §10), over one corpus and a stream of deltas:
+
+  * **append+publish vs rebuild+publish** — wall-clock to extend a
+    published artifact by a ~5% corpus delta (``index_io.append_index``:
+    materialize parent, plan + apply the delta, publish a delta segment)
+    vs rebuilding the concatenated corpus from scratch and re-publishing
+    every array. The delta path skips re-clustering, re-inverting, and
+    re-writing the base — the cheap-update property the document-ordered
+    layout buys (paper §1).
+
+  * **reopen-from-chain vs compacted** — ``load_index`` wall-clock at
+    chain lengths 1/2/4/8 (each link re-applies its delta) vs reopening
+    the compacted base: the price of deferring compaction.
+
+  * **parity** — the chain head's materialized fingerprint equals the
+    compacted artifact's (bitwise invariant, measured rather than assumed).
+
+Small sizes honour ``REPRO_BENCH_SMALL=1`` (the CI headline job).
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import sys
+import tempfile
+
+from benchmarks import common
+
+CHAIN_LENGTHS = (1, 2, 4, 8)
+
+
+def _corpora(small: bool):
+    from repro.data.synth import make_corpus
+
+    if small:
+        n_docs, n_terms, n_topics, doc_len = 4000, 3000, 8, 80
+    else:
+        n_docs, n_terms, n_topics, doc_len = 16000, 8000, 16, 120
+    delta_docs = n_docs // 20  # a ~5% append per link
+    base = make_corpus(n_docs=n_docs, n_terms=n_terms, n_topics=n_topics,
+                       mean_doc_len=doc_len, seed=0)
+    deltas = [
+        make_corpus(n_docs=delta_docs, n_terms=n_terms, n_topics=n_topics,
+                    mean_doc_len=doc_len, seed=100 + i)
+        for i in range(max(CHAIN_LENGTHS))
+    ]
+    return base, deltas
+
+
+def run(small: bool | None = None):
+    from repro import index_io
+    from repro.core.clustered_index import build_index
+    from repro.data.synth import concat_corpora
+
+    if small is None:
+        small = os.environ.get("REPRO_BENCH_SMALL") == "1"
+    base_corpus, deltas = _corpora(small)
+    n_ranges = 8 if small else 16
+    rows = []
+    tmp = tempfile.mkdtemp(prefix="bench_incremental_")
+    try:
+        base_path = os.path.join(tmp, "base")
+        with common.Timer() as t_base:
+            index = build_index(base_corpus, n_ranges=n_ranges, strategy="clustered")
+            index_io.save_index(index, base_path, impact_dtype="int8")
+        rows.append({
+            "bench": "incremental",
+            "op": "base build+publish",
+            "docs": base_corpus.n_docs,
+            "ms": round(t_base.ms, 1),
+        })
+
+        # -------------------------------- append+publish vs rebuild+publish
+        head = os.path.join(tmp, "chain_1")
+        with common.Timer() as t_append:
+            ext = index_io.append_index(base_path, deltas[0], head)
+        rows.append({
+            "bench": "incremental",
+            "op": "append+publish",
+            "docs": deltas[0].n_docs,
+            "chain_length": 1,
+            "ms": round(t_append.ms, 1),
+        })
+
+        cat = concat_corpora(base_corpus, deltas[0])
+        rebuilt_path = os.path.join(tmp, "rebuilt")
+        with common.Timer() as t_rebuild:
+            rebuilt = build_index(cat, n_ranges=n_ranges + 1, strategy="clustered")
+            index_io.save_index(rebuilt, rebuilt_path, impact_dtype="int8")
+        rows.append({
+            "bench": "incremental",
+            "op": "rebuild+publish",
+            "docs": cat.n_docs,
+            "ms": round(t_rebuild.ms, 1),
+            "speedup_vs_rebuild": round(t_rebuild.ms / max(t_append.ms, 1e-9), 2),
+        })
+
+        # ------------------------------------------- chain length sweep
+        parent = head
+        for i in range(1, max(CHAIN_LENGTHS)):
+            nxt = os.path.join(tmp, f"chain_{i + 1}")
+            ext = index_io.append_index(parent, deltas[i], nxt)
+            parent = nxt
+        for length in CHAIN_LENGTHS:
+            head_l = os.path.join(tmp, f"chain_{length}")
+            with common.Timer() as t_open:
+                loaded = index_io.load_index(head_l)
+            rows.append({
+                "bench": "incremental",
+                "op": "reopen-chain",
+                "chain_length": length,
+                "docs": loaded.n_docs,
+                "ms": round(t_open.ms, 1),
+            })
+
+        compacted = os.path.join(tmp, "compacted")
+        with common.Timer() as t_compact:
+            index_io.compact(parent, compacted)
+        with common.Timer() as t_open_c:
+            comp = index_io.load_index(compacted)
+        rows.append({
+            "bench": "incremental",
+            "op": "reopen-compacted",
+            "chain_length": max(CHAIN_LENGTHS),
+            "compact_ms": round(t_compact.ms, 1),
+            "ms": round(t_open_c.ms, 1),
+            # The §10 invariant, measured: chain head == compacted, bitwise.
+            "parity_bitwise": bool(comp.fingerprint() == ext.fingerprint()),
+        })
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    common.save_result("incremental", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run(small="--small" in sys.argv):
+        print(row)

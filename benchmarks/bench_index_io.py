@@ -36,10 +36,22 @@ def _topk(engine: Engine, q: np.ndarray):
     return np.asarray(res.state.ids).tolist(), np.asarray(res.state.vals).tolist()
 
 
-def run():
-    corpus = common.bench_corpus()
-    queries = common.bench_queries(corpus, n=N_PARITY_QUERIES)
-    index = common.bench_index(corpus, "clustered_bp")
+def run(small: bool | None = None):
+    if small is None:
+        small = os.environ.get("REPRO_BENCH_SMALL") == "1"
+    if small:
+        from repro.data.synth import make_corpus, make_query_log
+
+        corpus = make_corpus(n_docs=4000, n_terms=3000, n_topics=8,
+                             mean_doc_len=80, seed=0)
+        queries = make_query_log(corpus, n_queries=N_PARITY_QUERIES, seed=1)
+        index = common.build_index_cached(
+            corpus, cache_dir=common.CACHE, n_ranges=8, strategy="clustered",
+        )
+    else:
+        corpus = common.bench_corpus()
+        queries = common.bench_queries(corpus, n=N_PARITY_QUERIES)
+        index = common.bench_index(corpus, "clustered_bp")
     ref = Engine(index, k=10)
     common.warmup_engine(ref, [queries.terms[i] for i in range(3)])
 

@@ -62,11 +62,13 @@ def _serve(beng, plans, budget=None):
     return times, time.perf_counter() - t0
 
 
-def run(small: bool = False):
+def run(small: bool | None = None):
     import jax
 
     from repro.serving import BatchEngine, BucketSpec, ShardedBatchEngine, ShardedEngine
 
+    if small is None:
+        small = os.environ.get("REPRO_BENCH_SMALL") == "1"
     if small:
         from repro.data.synth import make_corpus, make_query_log
 

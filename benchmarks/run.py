@@ -33,6 +33,7 @@ MODULES = [
     ("S2_sharded_serving", "benchmarks.bench_sharded_serving"),
     ("S3_index_io", "benchmarks.bench_index_io"),
     ("S4_control_plane", "benchmarks.bench_control_plane"),
+    ("S5_incremental", "benchmarks.bench_incremental"),
     ("T8_failures", "benchmarks.bench_failures"),
     ("Q_quantization", "benchmarks.bench_quantization"),
 ]
@@ -113,6 +114,23 @@ def _headline(name: str, rows) -> tuple[float, str]:
                 f"qps_1rep={next(x for x in rows if x['mode'] == 'replicas-1')['qps']}"
                 f"_2rep={r2['qps']}_reshard_qps={live['qps_during']}"
                 f"_served_during={live['served_during']}",
+            )
+        if name == "S5_incremental":
+            app = next(x for x in rows if x["op"] == "append+publish")
+            reb = next(x for x in rows if x["op"] == "rebuild+publish")
+            deep = next(
+                x for x in rows if x["op"] == "reopen-chain"
+                and x["chain_length"] == max(
+                    y["chain_length"] for y in rows if y["op"] == "reopen-chain"
+                )
+            )
+            comp = next(x for x in rows if x["op"] == "reopen-compacted")
+            return (
+                app["ms"] * 1e3,
+                f"append={app['ms']}ms_rebuild={reb['ms']}ms_"
+                f"speedup={reb['speedup_vs_rebuild']}x_"
+                f"reopen{deep['chain_length']}={deep['ms']}ms_"
+                f"compacted={comp['ms']}ms_parity={comp['parity_bitwise']}",
             )
         if name == "Q_quantization":
             r8 = next(x for x in rows if x["bits"] == 8)

@@ -1,7 +1,9 @@
-# Anytime serving control plane (DESIGN.md §9): replicated shard groups,
-# online reshard with staged live cutover, and health-ledger-driven
-# degraded failover — all above the §3/§4 serving engines.
+# Anytime serving control plane (DESIGN.md §9, §10): replicated shard
+# groups, online reshard with staged live cutover, health-ledger-driven
+# degraded failover — all above the §3/§4 serving engines — plus a durable
+# topology journal replayed across process restarts.
 from repro.control.health import HealthEvent, HealthLedger  # noqa: F401
+from repro.control.journal import TopologyJournal  # noqa: F401
 from repro.control.plane import ControlPlane  # noqa: F401
 from repro.control.replica import ReplicaGroupEngine  # noqa: F401
 from repro.control.reshard import ReshardPlanner, ReshardTask  # noqa: F401

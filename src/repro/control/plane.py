@@ -20,19 +20,30 @@ cooperating behaviours:
     opens a staged ``ReshardTask`` whose ``step()`` runs between
     micro-batches, and the engine pointer swaps only when the successor is
     built and warm — serving never pauses, and post-cutover results are
-    bitwise-equal to a fresh build at the new layout.
+    bitwise-equal to a fresh build at the new layout. A reshard never
+    starts during an outage: outage-skewed counters would re-seed the
+    budgeter wrong and the cutover would restack from a possibly-dead
+    device's arrays (``start_reshard`` refuses, or defers until the fleet
+    recovers);
+  * **durability** — with a ``TopologyJournal`` attached
+    (``ControlPlane.from_artifact``), reshard commits and health
+    transitions append to ``journal.jsonl`` inside the serving artifact,
+    and ``from_artifact(..., replay=True)`` reconstructs the journaled
+    cuts + ledger in a fresh process (DESIGN.md §10).
 """
 
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
 
 from repro.control.health import HealthLedger
+from repro.control.journal import JOURNAL_NAME, TopologyJournal
 from repro.control.replica import ReplicaGroupEngine
 from repro.control.reshard import ReshardPlanner, ReshardTask
-from repro.core.clustered_index import range_postings_mass
+from repro.core.clustered_index import range_postings_mass, shard_device_index
 from repro.core.range_daat import Engine
 from repro.serving.bucketing import BucketSpec
 from repro.serving.microbatch import MicroBatchServer, ShardedSlaBudgeter
@@ -79,6 +90,7 @@ class ControlPlane:
         budgeter: ShardedSlaBudgeter | None = None,
         max_batch: int | None = None,
         clock=time.perf_counter,
+        journal: TopologyJournal | None = None,
     ):
         self.engine = engine
         self.n_replicas = n_replicas
@@ -92,17 +104,71 @@ class ControlPlane:
             mode=budget_mode,
             shard_mass=self._shard_mass,
         )
+        if getattr(self.budgeter, "down_mask", False) is None:
+            # Base-API `observe` feedback must not credit postings to
+            # health-ledger-down shards (their EWMAs stay frozen through an
+            # outage) — wire the ledger in unless the caller already did.
+            self.budgeter.down_mask = self.health.shard_down_mask
         self.planner = ReshardPlanner(
             range_mass=range_postings_mass(engine.index),
             cuts=self.sengine.cuts,
             trigger=reshard_trigger,
         )
         self.reshard_task: ReshardTask | None = None
+        self.deferred_reshard: dict | None = None
         self.reshards_completed = 0
         self.batches_served = 0
         self.queries_served = 0
         self.queries_served_during_reshard = 0
         self.server = _PlaneServer(self, max_batch=max_batch, clock=clock)
+        # Topology journal (DESIGN.md §10): records are stamped with the
+        # served index's fingerprint so replay can refuse a foreign journal.
+        # The fingerprint (a sha1 pass over the postings arrays) is computed
+        # lazily — journal-less planes never pay for it.
+        self.journal = journal
+        self._journal_muted = False
+        self._fp_cache: str | None = None
+
+    @property
+    def _fingerprint(self) -> str:
+        if self._fp_cache is None:
+            self._fp_cache = self.engine.index.fingerprint()
+        return self._fp_cache
+
+    @classmethod
+    def from_artifact(
+        cls,
+        path: str,
+        n_shards: int,
+        replay: bool = False,
+        journal: bool = True,
+        engine_kwargs: dict | None = None,
+        **plane_kwargs,
+    ) -> "ControlPlane":
+        """Open a plane over a saved index artifact (or delta-chain head).
+
+        ``journal=True`` attaches ``<path>/journal.jsonl`` so topology
+        changes persist; ``replay=True`` additionally reconstructs the
+        journaled cuts and health-ledger state before serving — a broker
+        that died mid-reshard resumes at the last *committed* layout
+        (uncommitted cutover work is simply re-planned). ``engine_kwargs``
+        go to ``Engine.from_artifact`` (k, impact_dtype, ...); everything
+        else to the plane constructor.
+        """
+        engine = Engine.from_artifact(path, **(engine_kwargs or {}))
+        plane = cls(
+            engine,
+            n_shards,
+            journal=(
+                TopologyJournal(os.path.join(path, JOURNAL_NAME))
+                if journal
+                else None
+            ),
+            **plane_kwargs,
+        )
+        if replay:
+            plane.replay_journal()
+        return plane
 
     # ----------------------------------------------------------- installing
     def _install(self, sengine: ShardedEngine) -> None:
@@ -199,24 +265,109 @@ class ControlPlane:
         if up.all():
             self.planner.observe(per_shard, len(results))
 
+    # -------------------------------------------------------------- journal
+    def _journal_append(self, record: dict) -> None:
+        if self.journal is None or self._journal_muted:
+            return
+        self.journal.append({"fingerprint": self._fingerprint, **record})
+
+    def replay_journal(self) -> int:
+        """Reconstruct journaled topology state; returns records applied.
+
+        The last committed reshard's cuts become the live layout (rebuilt
+        via ``shard_device_index(cuts=...)`` — bitwise what the original
+        cutover served), then health transitions re-drive the ledger in
+        order. Records stamped with a different index fingerprint are
+        refused: a journal describes exactly one materialized index.
+        """
+        if self.journal is None:
+            raise RuntimeError("no topology journal attached")
+        records = self.journal.records()
+        foreign = [
+            r for r in records if r.get("fingerprint") != self._fingerprint
+        ]
+        if foreign:
+            from repro.index_io import ArtifactError
+
+            raise ArtifactError(
+                f"journal {self.journal.path} has {len(foreign)} record(s) "
+                f"for index {foreign[0].get('fingerprint')}, but the live "
+                f"index is {self._fingerprint} — refusing to replay a "
+                f"foreign topology"
+            )
+        cuts, last_reshard = None, -1
+        for i, r in enumerate(records):
+            if r.get("kind") == "reshard":
+                cuts, last_reshard = np.asarray(r["cuts"], np.int64), i
+        if cuts is not None and not np.array_equal(cuts, self.sengine.cuts):
+            self._adopt_layout(
+                ShardedEngine(
+                    self.engine,
+                    int(cuts.shape[0] - 1),
+                    use_mesh=self._use_mesh,
+                    shards=shard_device_index(self.engine.index, cuts=cuts),
+                ),
+                cuts,
+            )
+        self.reshards_completed = sum(
+            1 for r in records if r.get("kind") == "reshard"
+        )
+        self._journal_muted = True
+        try:
+            # Only health records AFTER the last committed reshard apply:
+            # the live _cutover reset the ledger at that point (shard
+            # indices name different range bands across layouts), and
+            # older records may reference shard ids the new layout no
+            # longer has.
+            for r in records[last_reshard + 1:]:
+                if r.get("kind") != "health":
+                    continue
+                replica = r.get("replica")
+                if r.get("event") == "down":
+                    self.mark_down(int(r["shard"]), replica)
+                else:
+                    self.mark_up(int(r["shard"]), replica)
+        finally:
+            self._journal_muted = False
+        return len(records)
+
     # ------------------------------------------------------------- failover
     def mark_down(self, shard: int, replica: int | None = None) -> None:
         self.health.mark_down(shard, replica)
+        self._journal_append(
+            {"kind": "health", "event": "down", "shard": int(shard),
+             "replica": None if replica is None else int(replica)}
+        )
 
     def mark_up(self, shard: int, replica: int | None = None) -> None:
         self.health.mark_up(shard, replica)
+        self._journal_append(
+            {"kind": "health", "event": "up", "shard": int(shard),
+             "replica": None if replica is None else int(replica)}
+        )
+        if self.deferred_reshard is not None and self.health.all_up:
+            pending, self.deferred_reshard = self.deferred_reshard, None
+            self.start_reshard(**pending)
 
     # -------------------------------------------------------------- reshard
     def maybe_reshard(self) -> bool:
         """Open a staged reshard if the planner is armed; returns True then."""
-        if self.reshard_task is not None or not self.planner.should_reshard():
+        if (
+            self.reshard_task is not None
+            or not self.health.all_up  # outage-skewed EWMAs arm spuriously
+            or not self.planner.should_reshard()
+        ):
             return False
         self.start_reshard(self.planner.propose())
         return True
 
     def start_reshard(
-        self, cuts, shards_path: str | None = None, warm_widths=None
-    ) -> ReshardTask:
+        self,
+        cuts,
+        shards_path: str | None = None,
+        warm_widths=None,
+        defer_if_degraded: bool = False,
+    ) -> ReshardTask | None:
         """Begin a live cutover to ``cuts``.
 
         Source arrays are the live engine's shards, or — with
@@ -224,12 +375,50 @@ class ControlPlane:
         reshard can be driven entirely from disk without the full index.
         ``warm_widths`` pre-compiles those width buckets on the successor
         before the swap (defaults to every width the live engine has seen).
+
+        Refused while any shard is health-ledger down: a cutover mid-outage
+        would re-seed budgeter EWMAs from outage-skewed counters and
+        restack from a possibly-dead device's arrays. Pass
+        ``defer_if_degraded=True`` to queue the request instead — it
+        starts automatically at the ``mark_up`` that restores full health
+        (returns None in the deferred case).
         """
         if self.reshard_task is not None:
             raise RuntimeError("a reshard is already in flight")
+        # Validate the request up front — also on the deferred path, so a
+        # bad request fails at request time, never out of a later mark_up.
         cuts = np.asarray(cuts, np.int64)
+        R = int(self.sengine.cuts[-1])
+        if (
+            cuts.ndim != 1
+            or cuts.shape[0] < 2
+            or cuts[0] != 0
+            or cuts[-1] != R
+            or np.any(np.diff(cuts) < 1)
+        ):
+            raise ValueError(
+                f"cuts {cuts.tolist()} must rise strictly from 0 to "
+                f"n_ranges={R} (every shard keeps >= 1 range)"
+            )
         if np.array_equal(cuts, self.sengine.cuts):
             raise ValueError(f"cuts {cuts.tolist()} are already the live layout")
+        if not self.health.all_up:
+            if defer_if_degraded:
+                self.deferred_reshard = dict(
+                    cuts=cuts,
+                    shards_path=shards_path,
+                    warm_widths=warm_widths,
+                )
+                return None
+            down = np.nonzero(self.health.shard_down_mask())[0].tolist()
+            raise RuntimeError(
+                f"refusing to start a reshard during an outage (ledger has "
+                f"down shards {down}, degraded replicas "
+                f"{(~self.health.replica_healthy_mask()).sum()}): cutover "
+                f"would restack from possibly-dead arrays and re-seed "
+                f"budgets from outage-skewed counters — mark_up first, or "
+                f"pass defer_if_degraded=True"
+            )
         if shards_path is not None:
             from repro import index_io
 
@@ -295,16 +484,30 @@ class ControlPlane:
         )
         self.server.bengine = self.bengine
         self.health.reset(task.n_shards)
-        if self.budgeter.n_shards != task.n_shards:
-            # A cutover may change the shard count; re-seed the per-shard
-            # throughput EWMAs at the old mean so budgets stay sane.
-            self.budgeter.n_shards = task.n_shards
-            self.budgeter.rates = np.full(
-                task.n_shards, float(np.mean(self.budgeter.rates)), np.float64
-            )
+        self._reseed_budgeter(task.n_shards)
         self.planner.committed(task.cuts)
         self.reshard_task = None
         self.reshards_completed += 1
+        self._journal_append(
+            {"kind": "reshard", "cuts": [int(c) for c in task.cuts]}
+        )
+
+    def _reseed_budgeter(self, n_shards: int) -> None:
+        if self.budgeter.n_shards != n_shards:
+            # A layout change may change the shard count; re-seed the
+            # per-shard throughput EWMAs at the old mean so budgets stay sane.
+            self.budgeter.n_shards = n_shards
+            self.budgeter.rates = np.full(
+                n_shards, float(np.mean(self.budgeter.rates)), np.float64
+            )
+
+    def _adopt_layout(self, sengine: ShardedEngine, cuts: np.ndarray) -> None:
+        """Swap to a layout built outside a live cutover (journal replay)."""
+        self._install(sengine)
+        self.server.bengine = self.bengine
+        self.health.reset(sengine.n_shards)
+        self._reseed_budgeter(sengine.n_shards)
+        self.planner.committed(cuts)
 
     def save_shards(self, path: str, overwrite: bool = False) -> str:
         """Persist the live shard layout as an ``index_io`` artifact.
@@ -339,6 +542,8 @@ class ControlPlane:
             "reshard_in_flight": (
                 self.reshard_task.stage if self.reshard_task else None
             ),
+            "reshard_deferred": self.deferred_reshard is not None,
+            "journal": self.journal.path if self.journal else None,
             "reshards_completed": self.reshards_completed,
             "batches_served": self.batches_served,
             "queries_served": self.queries_served,

@@ -9,6 +9,13 @@ All contributions are computed once at index-build time (numpy, host side)
 and quantized to b-bit integer *impacts* (see quantize.py) — the engine then
 works in integer space end-to-end, exactly like the paper's JASS arm, and the
 PISA arm's float scores are a monotone rescaling of the same values.
+
+Collection statistics (df, N, average document length) may be *frozen* as a
+``CollectionStats`` and passed back in: incremental index extension
+(DESIGN.md §10) scores appended documents against the statistics of the base
+build, so existing postings keep bit-identical impacts — the classic
+stale-statistics convention of updatable inverted indexes, refreshed only by
+a full rebuild.
 """
 
 from __future__ import annotations
@@ -19,13 +26,50 @@ import numpy as np
 
 from repro.data.synth import Corpus
 
-__all__ = ["BM25Params", "bm25_contributions", "invert"]
+__all__ = [
+    "BM25Params",
+    "CollectionStats",
+    "bm25_contributions",
+    "collection_stats",
+    "invert",
+]
 
 
 @dataclasses.dataclass(frozen=True)
 class BM25Params:
     k1: float = 0.4
     b: float = 0.9
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectionStats:
+    """Frozen collection-level BM25 statistics.
+
+    Captured at base-build time and carried through every incremental
+    extension: idf and the length normalization of appended postings use
+    *these* values, never the extended collection's, which is what keeps a
+    compacted chain bitwise-equal to one fresh build at the same stats
+    (DESIGN.md §10).
+    """
+
+    n_docs: int
+    avg_doc_len: float
+    df: np.ndarray  # [n_terms] int64 document frequency per term
+
+
+def collection_stats(corpus: Corpus) -> CollectionStats:
+    """Compute ``CollectionStats`` from a corpus (the base-build path)."""
+    df = np.zeros(corpus.n_terms, dtype=np.int64)
+    np.add.at(df, corpus.doc_terms, 1)
+    return CollectionStats(
+        n_docs=int(corpus.n_docs),
+        avg_doc_len=(
+            float(max(corpus.doc_lens.astype(np.float64).mean(), 1.0))
+            if corpus.n_docs
+            else 1.0
+        ),
+        df=df,
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,14 +91,28 @@ class Postings:
         return self.docs[s:e], self.scores[s:e]
 
 
-def bm25_contributions(corpus: Corpus, params: BM25Params = BM25Params()) -> np.ndarray:
-    """Per-posting BM25 contribution aligned with corpus CSR order."""
+def bm25_contributions(
+    corpus: Corpus,
+    params: BM25Params = BM25Params(),
+    stats: CollectionStats | None = None,
+) -> np.ndarray:
+    """Per-posting BM25 contribution aligned with corpus CSR order.
+
+    ``stats`` substitutes frozen collection statistics (df, N, avg length)
+    for the ones this corpus would yield — document lengths still come from
+    the corpus itself. Incremental extension scores a delta corpus this way.
+    """
     doc_lens = corpus.doc_lens.astype(np.float64)
-    avg_len = max(doc_lens.mean(), 1.0)
-    df = np.zeros(corpus.n_terms, dtype=np.int64)
-    np.add.at(df, corpus.doc_terms, 1)
+    if stats is None:
+        stats = collection_stats(corpus)
+    avg_len = stats.avg_doc_len
+    df = np.asarray(stats.df, dtype=np.int64)
+    if df.shape != (corpus.n_terms,):
+        raise ValueError(
+            f"stats.df has shape {df.shape}, corpus has {corpus.n_terms} terms"
+        )
     # Lucene/Anserini-style non-negative idf.
-    idf = np.log(1.0 + (corpus.n_docs - df + 0.5) / (df + 0.5))
+    idf = np.log(1.0 + (stats.n_docs - df + 0.5) / (df + 0.5))
 
     doc_of_posting = np.repeat(np.arange(corpus.n_docs), np.diff(corpus.doc_ptr))
     tf = corpus.doc_tfs.astype(np.float64)
@@ -67,13 +125,16 @@ def invert(
     corpus: Corpus,
     doc_order: np.ndarray | None = None,
     params: BM25Params = BM25Params(),
+    stats: CollectionStats | None = None,
 ) -> Postings:
     """Build document-ordered postings under a docid permutation.
 
     ``doc_order[new_id] = old_id`` — i.e. the permutation produced by the
     reordering stage. Postings come out sorted by (term, new docid).
+    ``stats`` scores against frozen collection statistics (see
+    :func:`bm25_contributions`).
     """
-    contrib = bm25_contributions(corpus, params)
+    contrib = bm25_contributions(corpus, params, stats=stats)
     doc_of_posting = np.repeat(
         np.arange(corpus.n_docs), np.diff(corpus.doc_ptr)
     ).astype(np.int64)

@@ -17,7 +17,12 @@ Three pillars:
     postings impacts int8 in HBM, widening only inside the scorer gather
     (``kernels/range_scorer/ref.py``).
 
-CLI: ``python -m repro.index_io {build,inspect,validate}``.
+Incremental artifacts (DESIGN.md §10): ``save_delta``/``load_chain`` store
+corpus appends as delta segments chained by ``parent_fingerprint``;
+``append_index`` is the one-call append-and-publish, ``compact`` squashes a
+chain into a fresh base bitwise-equal to a from-scratch build.
+
+CLI: ``python -m repro.index_io {build,append,compact,log,inspect,validate}``.
 """
 
 from repro.index_io.artifact import (  # noqa: F401
@@ -25,9 +30,15 @@ from repro.index_io.artifact import (  # noqa: F401
     ArtifactError,
     CorruptArtifactError,
     VersionMismatchError,
+    append_index,
+    clean_stale_staging,
+    compact,
+    iter_chain,
+    load_chain,
     load_index,
     load_shards,
     read_manifest,
+    save_delta,
     save_index,
     save_shards,
     validate_artifact,
@@ -46,13 +57,19 @@ __all__ = [
     "CorruptArtifactError",
     "MissingDependencyError",
     "VersionMismatchError",
+    "append_index",
     "available_readers",
+    "clean_stale_staging",
+    "compact",
     "get_reader",
+    "iter_chain",
+    "load_chain",
     "load_index",
     "load_shards",
     "read_corpus",
     "read_manifest",
     "register_reader",
+    "save_delta",
     "save_index",
     "save_shards",
     "validate_artifact",

@@ -1,16 +1,24 @@
-"""Index lifecycle CLI (DESIGN.md §8).
+"""Index lifecycle CLI (DESIGN.md §8, §10).
 
     python -m repro.index_io build    --out DIR [--reader synth|tsv|jsonl|ciff|ir_datasets]
                                       [--source PATH_OR_ID] [--impact-dtype int8|int32]
                                       [--shards N] [index-build options]
+    python -m repro.index_io append   --parent DIR --out DIR [--reader ...]
+                                      [--source ...] [--n-ranges N] [--strategy S]
+    python -m repro.index_io compact  DIR --out DIR [--impact-dtype int8|int32]
+    python -m repro.index_io log      DIR
     python -m repro.index_io inspect  DIR [--json]
     python -m repro.index_io validate DIR
 
 ``build`` ingests a corpus through the reader registry, builds the
 cluster-skipping index, and saves a versioned artifact (optionally plus a
-range-sharded artifact). ``inspect`` prints the manifest, per-array table,
-and space report without loading postings eagerly. ``validate``
-deep-checks checksums, dtypes/shapes, and the index fingerprint.
+range-sharded artifact). ``append`` ingests a *delta* corpus and publishes
+it as a chain link under an existing artifact (or chain head); ``compact``
+squashes a chain into a fresh base; ``log`` prints the chain links and any
+topology-journal records at the head. ``inspect`` prints the manifest,
+per-array table, and space report without loading postings eagerly.
+``validate`` deep-checks checksums, dtypes/shapes, and the index
+fingerprint (for a delta: the whole chain).
 """
 
 from __future__ import annotations
@@ -83,6 +91,96 @@ def _build(args: argparse.Namespace) -> int:
     return 0
 
 
+def _append(args: argparse.Namespace) -> int:
+    reader_kw = {}
+    if args.reader == "synth":
+        reader_kw = dict(
+            n_docs=args.n_docs, n_terms=args.n_terms, n_topics=args.n_topics,
+            mean_doc_len=args.mean_doc_len, seed=args.seed,
+        )
+    elif args.max_docs is not None:
+        reader_kw = dict(max_docs=args.max_docs)
+
+    t0 = time.perf_counter()
+    delta_corpus = corpus_io.read_corpus(args.reader, args.source, **reader_kw)
+    t1 = time.perf_counter()
+    print(
+        f"read [{args.reader}] delta: {delta_corpus.n_docs} docs, "
+        f"{delta_corpus.nnz} doc-term pairs ({t1 - t0:.1f}s)"
+    )
+    extended = artifact.append_index(
+        args.parent, delta_corpus, args.out,
+        impact_dtype=args.impact_dtype, overwrite=args.overwrite,
+        n_ranges=args.n_ranges, strategy=args.strategy, seed=args.seed,
+    )
+    t2 = time.perf_counter()
+    head = artifact.read_manifest(args.out)
+    print(
+        f"appended -> {args.out}: chain length {head['chain_length']}, "
+        f"{extended.n_docs} docs total, {extended.n_ranges} ranges, "
+        f"fingerprint {extended.fingerprint()} ({t2 - t1:.1f}s)"
+    )
+    return 0
+
+
+def _compact(args: argparse.Namespace) -> int:
+    t0 = time.perf_counter()
+    head = artifact.read_manifest(args.path)
+    artifact.clean_stale_staging(args.out)
+    artifact.compact(
+        args.path, args.out,
+        impact_dtype=args.impact_dtype, overwrite=args.overwrite,
+    )
+    t1 = time.perf_counter()
+    print(
+        f"compacted {args.path} (chain length "
+        f"{head.get('chain_length', 0)}) -> {args.out} ({t1 - t0:.1f}s)"
+    )
+    return 0
+
+
+def _log(args: argparse.Namespace) -> int:
+    # Chain links, head first (iter_chain owns the walk + cycle guard).
+    for path, manifest in artifact.iter_chain(args.path):
+        if manifest["kind"] == "index_delta":
+            print(
+                f"{path}: delta +{manifest['n_docs']} docs "
+                f"(total {manifest.get('n_docs_total', '?')}), "
+                f"chain length {manifest.get('chain_length', '?')}, "
+                f"fingerprint {manifest['fingerprint']} "
+                f"<- parent {manifest['parent_fingerprint']}"
+            )
+        else:
+            print(
+                f"{path}: {manifest['kind']} base, "
+                f"{manifest.get('n_docs', '?')} docs, "
+                f"fingerprint {manifest.get('fingerprint', '?')}"
+            )
+
+    # Topology-journal records at the head (DESIGN.md §10).
+    from repro.control.journal import JOURNAL_NAME, TopologyJournal
+
+    journal = TopologyJournal(os.path.join(args.path, JOURNAL_NAME))
+    records = journal.records()
+    if not records:
+        print("journal: (no records)")
+        return 0
+    print(f"journal: {len(records)} record(s)")
+    for rec in records:
+        kind = rec.get("kind")
+        if kind == "reshard":
+            detail = f"cuts={rec.get('cuts')}"
+        elif kind == "health":
+            detail = (
+                f"{rec.get('event')} shard={rec.get('shard')} "
+                f"replica={rec.get('replica')}"
+            )
+        else:
+            detail = json.dumps({k: v for k, v in rec.items() if k != "kind"})
+        print(f"  [{rec.get('seq')}] {kind}: {detail}")
+    return 0
+
+
 def _inspect(args: argparse.Namespace) -> int:
     manifest = artifact.read_manifest(args.path)
     if args.json:
@@ -101,6 +199,18 @@ def _inspect(args: argparse.Namespace) -> int:
             f"{q['bits']}-bit impacts stored as {manifest['impact_dtype']}"
         )
         print(f"  fingerprint {manifest['fingerprint']}")
+        rows = manifest["arrays"].items()
+    elif kind == "index_delta":
+        print(
+            f"  +{manifest['n_docs']} docs (total {manifest['n_docs_total']}), "
+            f"{manifest['n_ranges']} delta ranges, chain length "
+            f"{manifest['chain_length']}, impacts stored as "
+            f"{manifest['impact_dtype']}"
+        )
+        print(
+            f"  fingerprint {manifest['fingerprint']} <- parent "
+            f"{manifest['parent_fingerprint']} ({manifest['parent']})"
+        )
         rows = manifest["arrays"].items()
     else:
         print(
@@ -179,6 +289,47 @@ def main(argv: list[str] | None = None) -> int:
     b.add_argument("--n-topics", type=int, default=16, help="synth reader only")
     b.add_argument("--mean-doc-len", type=int, default=150, help="synth reader only")
     b.set_defaults(fn=_build)
+
+    a = sub.add_parser(
+        "append", help="ingest a delta corpus and publish a chain link"
+    )
+    a.add_argument("--parent", required=True,
+                   help="existing index artifact or chain head to extend")
+    a.add_argument("--out", required=True, help="delta directory to create")
+    a.add_argument("--reader", default="synth")
+    a.add_argument("--source", default="",
+                   help="reader source: file path, or ir_datasets id")
+    a.add_argument("--impact-dtype", default=None, choices=("int8", "int32"),
+                   help="delta impact storage (default: parent's dtype)")
+    a.add_argument("--overwrite", action="store_true")
+    a.add_argument("--n-ranges", type=int, default=1,
+                   help="ranges to carve the delta into (appended at the tail)")
+    a.add_argument("--strategy", default="clustered",
+                   help="delta arrangement strategy")
+    a.add_argument("--seed", type=int, default=0)
+    a.add_argument("--max-docs", type=int, default=None,
+                   help="cap ingested documents (tsv/jsonl/ciff/ir_datasets)")
+    a.add_argument("--n-docs", type=int, default=500, help="synth reader only")
+    a.add_argument("--n-terms", type=int, default=6000, help="synth reader only")
+    a.add_argument("--n-topics", type=int, default=16, help="synth reader only")
+    a.add_argument("--mean-doc-len", type=int, default=150, help="synth reader only")
+    a.set_defaults(fn=_append)
+
+    c = sub.add_parser(
+        "compact", help="squash a delta chain into a fresh base artifact"
+    )
+    c.add_argument("path", help="chain head (or base) to compact")
+    c.add_argument("--out", required=True, help="compacted artifact directory")
+    c.add_argument("--impact-dtype", default=None, choices=("int8", "int32"),
+                   help="storage dtype (default: the head's dtype)")
+    c.add_argument("--overwrite", action="store_true")
+    c.set_defaults(fn=_compact)
+
+    g = sub.add_parser(
+        "log", help="print the delta chain and topology-journal records"
+    )
+    g.add_argument("path")
+    g.set_defaults(fn=_log)
 
     i = sub.add_parser("inspect", help="print manifest, arrays, space report")
     i.add_argument("path")

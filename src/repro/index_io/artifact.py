@@ -1,4 +1,4 @@
-"""Versioned on-disk artifacts for built indexes (DESIGN.md §8).
+"""Versioned on-disk artifacts for built indexes (DESIGN.md §8, §10).
 
 Layout — one directory per artifact:
 
@@ -7,6 +7,17 @@ Layout — one directory per artifact:
                                state, fingerprint, per-array metadata
       arrays/<name>.npy        ClusteredIndex arrays (kind "clustered_index")
       shard_00000/<name>.npy   per-shard arrays      (kind "index_shards")
+      arrays/<name>.npy        IndexDelta arrays     (kind "index_delta")
+
+A delta artifact (DESIGN.md §10) stores only the appended documents'
+postings, impacts, and arrangement, plus a manifest whose
+``parent_fingerprint`` chains it to its base: ``parent`` is a relative path
+to the parent artifact (another delta, or the base ``clustered_index``).
+``load_index`` on a chain head follows parents to the base and materializes
+the extended index link by link (``core.clustered_index.apply_delta``);
+``compact`` squashes a chain into a fresh base bitwise-equal to a
+from-scratch build on the concatenated corpus at the base's frozen
+collection statistics.
 
 Every array is a plain ``.npy`` file so loading can be eager
 (``np.load``) or memory-mapped (``mmap_mode="r"``) without any format
@@ -30,10 +41,18 @@ import json
 import os
 import shutil
 import tempfile
+import time
 
 import numpy as np
 
-from repro.core.clustered_index import ClusteredIndex, IndexShard
+from repro.core.bm25 import BM25Params, CollectionStats
+from repro.core.clustered_index import (
+    ClusteredIndex,
+    IndexDelta,
+    IndexShard,
+    apply_delta,
+    plan_delta,
+)
 from repro.core.quantize import Quantizer
 from repro.core.range_daat import IMPACT_BIAS, IMPACT_DTYPES, pack_impacts
 from repro.core.reorder import Arrangement
@@ -44,9 +63,15 @@ __all__ = [
     "ArtifactError",
     "CorruptArtifactError",
     "VersionMismatchError",
+    "append_index",
+    "clean_stale_staging",
+    "compact",
+    "iter_chain",
+    "load_chain",
     "load_index",
     "load_shards",
     "read_manifest",
+    "save_delta",
     "save_index",
     "save_shards",
     "validate_artifact",
@@ -54,6 +79,15 @@ __all__ = [
 
 FORMAT = "repro-index-artifact"
 FORMAT_VERSION = 1
+
+# Readers retry once on a path that vanished mid-read: the overwrite publish
+# (``_atomic_publish``) swaps via rename-aside + rename-in, so a healthy
+# artifact can be absent for the microseconds between the two renames.
+_ENOENT_RETRY_S = 0.05
+
+# A delta chain longer than this is assumed to be a parent-pointer cycle or
+# a pathological artifact; compact long before here.
+MAX_CHAIN_LENGTH = 4096
 
 # ClusteredIndex fields persisted as arrays (arrangement flattened in).
 INDEX_ARRAYS = (
@@ -71,6 +105,9 @@ SHARD_ARRAYS = (
 
 SHARD_SCALARS = ("shard_id", "range_lo", "range_hi", "doc_base", "n_docs", "postings")
 
+# IndexDelta fields persisted as arrays (kind "index_delta").
+DELTA_ARRAYS = ("ptr", "docs", "impacts", "doc_order", "range_ends")
+
 
 class ArtifactError(Exception):
     """Base error for index artifact I/O."""
@@ -87,6 +124,26 @@ class VersionMismatchError(ArtifactError):
 # --------------------------------------------------------------------------
 # Low-level helpers
 # --------------------------------------------------------------------------
+
+
+def _retry_enoent(fn):
+    """Run ``fn``; on FileNotFoundError retry once after a short sleep.
+
+    The reader half of the ``_atomic_publish`` contract: an overwrite swap
+    admits a briefly-absent path, so one vanished open on a healthy artifact
+    is expected, and only a *second* miss means the artifact is really gone.
+
+    Scope: this protects against the absent-path window only. A reader that
+    straddles a publish of *different content* (manifest from the old tree,
+    arrays from the new) still gets a typed ``CorruptArtifactError`` from
+    the dtype/shape/fingerprint checks — a clean retryable error, not
+    torn data; full snapshot isolation would need versioned directories.
+    """
+    try:
+        return fn()
+    except FileNotFoundError:
+        time.sleep(_ENOENT_RETRY_S)
+        return fn()
 
 
 def _sha256_file(path: str) -> str:
@@ -111,10 +168,16 @@ def _write_array(root: str, rel: str, arr: np.ndarray) -> dict:
 
 def _read_array(root: str, meta: dict, name: str, mmap: bool) -> np.ndarray:
     path = os.path.join(root, meta["file"])
-    if not os.path.exists(path):
-        raise CorruptArtifactError(f"array {name!r}: missing file {meta['file']}")
     try:
-        arr = np.load(path, mmap_mode="r" if mmap else None, allow_pickle=False)
+        arr = _retry_enoent(
+            lambda: np.load(
+                path, mmap_mode="r" if mmap else None, allow_pickle=False
+            )
+        )
+    except FileNotFoundError:
+        raise CorruptArtifactError(
+            f"array {name!r}: missing file {meta['file']}"
+        ) from None
     except (ValueError, OSError) as e:
         raise CorruptArtifactError(f"array {name!r}: unreadable ({e})") from e
     if str(arr.dtype) != meta["dtype"] or list(arr.shape) != list(meta["shape"]):
@@ -152,6 +215,35 @@ def _staging_dir(path: str) -> str:
     parent = os.path.dirname(os.path.abspath(path))
     os.makedirs(parent, exist_ok=True)
     return tempfile.mkdtemp(prefix=os.path.basename(path) + ".tmp-", dir=parent)
+
+
+def clean_stale_staging(path: str, max_age_s: float = 3600.0) -> list[str]:
+    """Remove crashed saves' leftover staging dirs for this artifact path.
+
+    A save that died mid-write leaves a ``<name>.tmp-*`` sibling behind;
+    loaders never look at it (they address ``path`` directly), so it is
+    inert but wastes disk. Only directories older than ``max_age_s`` are
+    swept, so a *live* concurrent save's staging area is never clobbered.
+    Returns the names removed. The CLI append/compact paths call this
+    before staging their own write.
+    """
+    parent = os.path.dirname(os.path.abspath(path))
+    prefix = os.path.basename(path) + ".tmp-"
+    removed: list[str] = []
+    if not os.path.isdir(parent):
+        return removed
+    now = time.time()
+    for entry in os.listdir(parent):
+        if not entry.startswith(prefix):
+            continue
+        full = os.path.join(parent, entry)
+        try:
+            if os.path.isdir(full) and now - os.path.getmtime(full) >= max_age_s:
+                shutil.rmtree(full, ignore_errors=True)
+                removed.append(entry)
+        except OSError:
+            continue  # raced a concurrent publish; nothing to sweep
+    return removed
 
 
 def _atomic_publish(tmp: str, path: str, overwrite: bool) -> None:
@@ -193,15 +285,21 @@ def _write_manifest(root: str, manifest: dict) -> None:
 def read_manifest(path: str) -> dict:
     """Load and version-check an artifact manifest.
 
-    Raises ``CorruptArtifactError`` for unreadable/foreign JSON and
-    ``VersionMismatchError`` when the format version is not ours.
+    Raises ``CorruptArtifactError`` for missing/unreadable/foreign JSON and
+    ``VersionMismatchError`` when the format version is not ours. Retries
+    once when the path is briefly absent under a concurrent overwrite
+    publish (see ``_atomic_publish``).
     """
     mpath = os.path.join(path, "manifest.json")
-    if not os.path.exists(mpath):
-        raise CorruptArtifactError(f"no manifest.json under {path}")
-    try:
+
+    def _read():
         with open(mpath, encoding="utf-8") as f:
-            manifest = json.load(f)
+            return json.load(f)
+
+    try:
+        manifest = _retry_enoent(_read)
+    except FileNotFoundError:
+        raise CorruptArtifactError(f"no manifest.json under {path}") from None
     except (json.JSONDecodeError, UnicodeDecodeError) as e:
         raise CorruptArtifactError(f"manifest.json unparseable: {e}") from e
     if not isinstance(manifest, dict) or manifest.get("format") != FORMAT:
@@ -266,6 +364,22 @@ def _save_index_into(
         if name == "impacts":
             arr = _pack_disk_impacts(arr, impact_dtype, index.quantizer.bits)
         arrays[name] = _write_array(tmp, os.path.join("arrays", f"{name}.npy"), arr)
+    collection = None
+    if index.stats is not None:
+        # Frozen collection statistics (DESIGN.md §10): df as an array (it
+        # is NOT derivable from ptr once the index has been extended),
+        # scalars + BM25 params in the manifest, so a reloaded artifact can
+        # plan further deltas.
+        arrays["stats_df"] = _write_array(
+            tmp,
+            os.path.join("arrays", "stats_df.npy"),
+            np.asarray(index.stats.df, np.int64),
+        )
+        collection = {
+            "n_docs": int(index.stats.n_docs),
+            "avg_doc_len": float(index.stats.avg_doc_len),
+            "bm25": {"k1": float(index.bm25.k1), "b": float(index.bm25.b)},
+        }
 
     manifest = {
         "format": FORMAT,
@@ -286,6 +400,8 @@ def _save_index_into(
         "fingerprint": index.fingerprint(),
         "arrays": arrays,
     }
+    if collection is not None:
+        manifest["collection"] = collection
     if impact_dtype == "int8":
         manifest["impact_bias"] = IMPACT_BIAS
     _write_manifest(tmp, manifest)
@@ -294,14 +410,19 @@ def _save_index_into(
 
 
 def load_index(path: str, mmap: bool = False) -> ClusteredIndex:
-    """Load a ``clustered_index`` artifact back into host memory.
+    """Load a ``clustered_index`` artifact (or a delta-chain head) back
+    into host memory.
 
     ``mmap=True`` memory-maps every array read-only instead of copying it —
     int8-stored impacts are the one exception, since they are widened back
     to exact int32 for the host structure (the device upload re-narrows via
-    ``Engine(impact_dtype="int8")``).
+    ``Engine(impact_dtype="int8")``). Pointing at an ``index_delta``
+    artifact follows its parent chain and materializes the extended index
+    (DESIGN.md §10).
     """
     manifest = read_manifest(path)
+    if manifest.get("kind") == "index_delta":
+        return load_chain(path, mmap=mmap)
     if manifest.get("kind") != "clustered_index":
         raise CorruptArtifactError(
             f"expected kind 'clustered_index', got {manifest.get('kind')!r}"
@@ -319,11 +440,35 @@ def load_index(path: str, mmap: bool = False) -> ClusteredIndex:
         range_ends=a["range_ends"],
         strategy=manifest["arrangement"]["strategy"],
     )
+    stats = None
+    bm25 = BM25Params()
+    collection = manifest.get("collection")
+    if (collection is None) != ("stats_df" not in metas):
+        # Both or neither: a half-present stats record is corruption, not a
+        # pre-§10 artifact — failing here beats an unexplainable "cannot
+        # extend" much later.
+        raise CorruptArtifactError(
+            "inconsistent frozen collection stats: manifest 'collection' "
+            "and arrays entry 'stats_df' must both be present or both absent"
+        )
+    if collection is not None and "stats_df" in metas:
+        stats = CollectionStats(
+            n_docs=int(collection["n_docs"]),
+            avg_doc_len=float(collection["avg_doc_len"]),
+            df=np.asarray(
+                _read_array(path, metas["stats_df"], "stats_df", mmap), np.int64
+            ),
+        )
+        bm25 = BM25Params(
+            k1=float(collection["bm25"]["k1"]), b=float(collection["bm25"]["b"])
+        )
     index = ClusteredIndex(
         n_docs=int(manifest["n_docs"]),
         n_terms=int(manifest["n_terms"]),
         arrangement=arrangement,
         quantizer=Quantizer(bits=int(q["bits"]), scale=float(q["scale"])),
+        stats=stats,
+        bm25=bm25,
         **{n: a[n] for n in INDEX_ARRAYS if n not in ("doc_order", "range_ends")},
     )
     if index.fingerprint() != manifest["fingerprint"]:
@@ -332,6 +477,262 @@ def load_index(path: str, mmap: bool = False) -> ClusteredIndex:
             f"loaded arrays {index.fingerprint()}"
         )
     return index
+
+
+# --------------------------------------------------------------------------
+# Delta segments + manifest chain (DESIGN.md §10)
+# --------------------------------------------------------------------------
+
+
+def save_delta(
+    delta: IndexDelta,
+    path: str,
+    parent_path: str,
+    result_fingerprint: str,
+    impact_dtype: str = "int32",
+    overwrite: bool = False,
+) -> str:
+    """Persist an ``IndexDelta`` as a chain link under ``parent_path``.
+
+    The delta directory stores only the appended documents' arrays (a few
+    percent of a full re-save for a small append); the manifest records a
+    *relative* ``parent`` path (the chain moves as a tree) plus
+    ``parent_fingerprint`` — refused unless it matches the parent artifact,
+    so a delta can never silently chain to the wrong base.
+    ``result_fingerprint`` is the fingerprint of the materialized extended
+    index (``apply_delta(parent, delta).fingerprint()``), which loaders
+    verify after materialization.
+    """
+    parent = read_manifest(parent_path)
+    if parent.get("kind") not in ("clustered_index", "index_delta"):
+        raise ArtifactError(
+            f"parent {parent_path} has kind {parent.get('kind')!r}; a delta "
+            f"chains to a clustered_index base or another delta"
+        )
+    if parent.get("fingerprint") != delta.parent_fingerprint:
+        raise ArtifactError(
+            f"delta was planned against index {delta.parent_fingerprint}, "
+            f"but parent artifact {parent_path} holds "
+            f"{parent.get('fingerprint')} — refusing a mis-chained delta"
+        )
+    chain_length = int(parent.get("chain_length", 0)) + 1
+    if chain_length > MAX_CHAIN_LENGTH:
+        raise ArtifactError(
+            f"chain would be {chain_length} links long (max "
+            f"{MAX_CHAIN_LENGTH}); compact the chain first"
+        )
+    quantizer = parent.get("quantizer")
+    if quantizer is None:
+        raise CorruptArtifactError(
+            f"parent {parent_path} records no quantizer state"
+        )
+    tmp = _staging_dir(path)
+    try:
+        return _save_delta_into(
+            tmp, delta, path, parent_path, parent, chain_length,
+            result_fingerprint, impact_dtype, overwrite,
+        )
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)  # no orphaned staging dirs
+        raise
+
+
+def _save_delta_into(
+    tmp: str,
+    delta: IndexDelta,
+    path: str,
+    parent_path: str,
+    parent: dict,
+    chain_length: int,
+    result_fingerprint: str,
+    impact_dtype: str,
+    overwrite: bool,
+) -> str:
+    arrays = {}
+    for name in DELTA_ARRAYS:
+        arr = getattr(delta, name)
+        if name == "impacts":
+            arr = _pack_disk_impacts(
+                arr, impact_dtype, int(parent["quantizer"]["bits"])
+            )
+        arrays[name] = _write_array(tmp, os.path.join("arrays", f"{name}.npy"), arr)
+
+    manifest = {
+        "format": FORMAT,
+        "format_version": FORMAT_VERSION,
+        "kind": "index_delta",
+        "parent": os.path.relpath(
+            os.path.abspath(parent_path), start=os.path.abspath(path)
+        ),
+        "parent_fingerprint": delta.parent_fingerprint,
+        "fingerprint": result_fingerprint,
+        "chain_length": chain_length,
+        "n_docs": int(delta.n_docs),
+        "n_docs_total": int(
+            parent.get("n_docs_total", parent.get("n_docs", 0))
+        ) + int(delta.n_docs),
+        "n_terms": int(delta.n_terms),
+        "n_ranges": int(delta.n_ranges),
+        "impact_dtype": impact_dtype,
+        "quantizer": dict(parent["quantizer"]),
+        "arrays": arrays,
+    }
+    if impact_dtype == "int8":
+        manifest["impact_bias"] = IMPACT_BIAS
+    _write_manifest(tmp, manifest)
+    _atomic_publish(tmp, path, overwrite)
+    return path
+
+
+def _resolve_parent(path: str, manifest: dict) -> str:
+    rel = manifest.get("parent")
+    if not isinstance(rel, str) or not rel:
+        raise CorruptArtifactError(f"{path}: delta manifest lacks a parent path")
+    return os.path.normpath(os.path.join(path, rel))
+
+
+def _load_delta_record(path: str, manifest: dict, mmap: bool) -> IndexDelta:
+    metas = manifest.get("arrays", {})
+    missing = [n for n in DELTA_ARRAYS if n not in metas]
+    if missing:
+        raise CorruptArtifactError(f"delta manifest lacks arrays: {missing}")
+    a = {n: _read_array(path, metas[n], n, mmap) for n in DELTA_ARRAYS}
+    a["impacts"] = _unpack_disk_impacts(a["impacts"], manifest)
+    return IndexDelta(
+        n_docs=int(manifest["n_docs"]),
+        n_terms=int(manifest["n_terms"]),
+        parent_fingerprint=manifest["parent_fingerprint"],
+        ptr=np.asarray(a["ptr"], np.int64),
+        docs=np.asarray(a["docs"], np.int32),
+        impacts=a["impacts"],
+        doc_order=np.asarray(a["doc_order"], np.int64),
+        range_ends=np.asarray(a["range_ends"], np.int64),
+    )
+
+
+def iter_chain(path: str):
+    """Yield ``(path, manifest)`` per chain link — head first, base last.
+
+    The one chain walk (shared by :func:`load_chain` and the CLI ``log``):
+    resolves relative ``parent`` pointers, guards against cycles and
+    over-long chains, and guarantees the final yielded link is the
+    ``clustered_index`` base — anything else raises
+    ``CorruptArtifactError``. A bare base artifact yields just itself.
+    """
+    seen: set[str] = set()
+    p, manifest = path, read_manifest(path)
+    while manifest.get("kind") == "index_delta":
+        key = os.path.abspath(p)
+        if key in seen or len(seen) >= MAX_CHAIN_LENGTH:
+            raise CorruptArtifactError(
+                f"delta chain at {path} cycles or exceeds "
+                f"{MAX_CHAIN_LENGTH} links"
+            )
+        seen.add(key)
+        yield p, manifest
+        p = _resolve_parent(p, manifest)
+        manifest = read_manifest(p)
+    if manifest.get("kind") != "clustered_index":
+        raise CorruptArtifactError(
+            f"chain base {p} has kind {manifest.get('kind')!r}, expected "
+            f"'clustered_index'"
+        )
+    yield p, manifest
+
+
+def load_chain(path: str, mmap: bool = False) -> ClusteredIndex:
+    """Materialize a delta-chain head into one extended ``ClusteredIndex``.
+
+    Walks ``parent`` pointers to the ``clustered_index`` base, then applies
+    each delta oldest-first. Every link is verified twice: ``apply_delta``
+    refuses a delta whose ``parent_fingerprint`` does not match what the
+    chain materialized so far, and the materialized fingerprint must equal
+    each link's manifest ``fingerprint``. Cycles and over-long chains raise
+    ``CorruptArtifactError``.
+    """
+    links = list(iter_chain(path))
+    index = load_index(links[-1][0], mmap=mmap)
+    for dp, dm in reversed(links[:-1]):
+        delta = _load_delta_record(dp, dm, mmap)
+        try:
+            index = apply_delta(index, delta)
+        except ValueError as e:
+            raise CorruptArtifactError(f"{dp}: {e}") from e
+        if index.fingerprint() != dm.get("fingerprint"):
+            raise CorruptArtifactError(
+                f"{dp}: materialized fingerprint {index.fingerprint()} != "
+                f"manifest {dm.get('fingerprint')}"
+            )
+    return index
+
+
+def compact(
+    path: str,
+    out: str,
+    impact_dtype: str | None = None,
+    overwrite: bool = False,
+) -> str:
+    """Squash a delta chain into a fresh base artifact.
+
+    The compacted base is bitwise-equal to a from-scratch
+    ``clustered_index`` build on the concatenated corpus (at the chain's
+    shared arrangement, quantizer, and frozen collection statistics) — the
+    §10 tier-1 invariant, pinned by tests. ``impact_dtype`` defaults to the
+    chain head's storage dtype. Compacting an un-chained base is a plain
+    re-save (useful to shed a long-gone chain's journal).
+    """
+    manifest = read_manifest(path)
+    if impact_dtype is None:
+        impact_dtype = manifest.get("impact_dtype", "int32")
+    index = load_index(path, mmap=True)
+    return save_index(
+        index,
+        out,
+        impact_dtype=impact_dtype,
+        build_params={
+            "compacted_from": os.path.abspath(path),
+            "chain_length": int(manifest.get("chain_length", 0)),
+        },
+        overwrite=overwrite,
+    )
+
+
+def append_index(
+    parent_path: str,
+    corpus_delta,
+    path: str,
+    impact_dtype: str | None = None,
+    overwrite: bool = False,
+    n_ranges: int = 1,
+    strategy: str = "clustered",
+    seed: int = 0,
+) -> ClusteredIndex:
+    """Extend a saved artifact (or chain head) with a delta corpus.
+
+    Loads/materializes the parent, plans + applies the delta, publishes a
+    new chain link at ``path``, and returns the extended in-memory index
+    (ready to serve — no reload needed). ``impact_dtype`` defaults to the
+    parent's storage dtype. Stale staging leftovers for ``path`` from a
+    crashed earlier append are swept first.
+    """
+    parent_manifest = read_manifest(parent_path)
+    if impact_dtype is None:
+        impact_dtype = parent_manifest.get("impact_dtype", "int32")
+    index = load_index(parent_path)
+    delta = plan_delta(
+        index, corpus_delta, n_ranges=n_ranges, strategy=strategy, seed=seed
+    )
+    extended = apply_delta(index, delta)
+    clean_stale_staging(path)
+    save_delta(
+        delta,
+        path,
+        parent_path,
+        result_fingerprint=extended.fingerprint(),
+        impact_dtype=impact_dtype,
+        overwrite=overwrite,
+    )
+    return extended
 
 
 # --------------------------------------------------------------------------
@@ -468,7 +869,7 @@ def load_shards(path: str, mmap: bool = False) -> list[IndexShard]:
 
 
 def _iter_array_metas(manifest: dict):
-    if manifest["kind"] == "clustered_index":
+    if manifest["kind"] in ("clustered_index", "index_delta"):
         yield from manifest.get("arrays", {}).items()
     else:
         for row in manifest.get("shards", []):
@@ -493,10 +894,11 @@ def validate_artifact(path: str) -> list[str]:
 
     for name, meta in _iter_array_metas(manifest):
         fpath = os.path.join(path, meta["file"])
-        if not os.path.exists(fpath):
+        try:
+            digest = _retry_enoent(lambda: _sha256_file(fpath))
+        except FileNotFoundError:
             problems.append(f"{name}: missing file {meta['file']}")
             continue
-        digest = _sha256_file(fpath)
         if digest != meta["sha256"]:
             problems.append(
                 f"{name}: sha256 mismatch (manifest {meta['sha256'][:12]}…, "
@@ -510,6 +912,13 @@ def validate_artifact(path: str) -> list[str]:
     if not problems and manifest["kind"] == "clustered_index":
         try:
             load_index(path, mmap=True)
+        except ArtifactError as e:
+            problems.append(str(e))
+    if not problems and manifest["kind"] == "index_delta":
+        # A delta is only as valid as its chain: materialize it, which
+        # checks every parent link's fingerprint on the way.
+        try:
+            load_chain(path, mmap=True)
         except ArtifactError as e:
             problems.append(str(e))
     return problems

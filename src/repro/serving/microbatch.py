@@ -93,6 +93,7 @@ class ShardedSlaBudgeter(SlaBudgeter):
     n_shards: int = 1
     mode: str = "rate"  # "rate" | "boundsum"
     shard_mass: object = None  # callable QueryPlan -> [n_shards] mass
+    down_mask: object = None  # callable -> [n_shards] bool, True = shard down
 
     def __post_init__(self):
         if self.mode not in ("rate", "boundsum"):
@@ -154,16 +155,31 @@ class ShardedSlaBudgeter(SlaBudgeter):
 
     def observe(self, elapsed_ms: float, total_postings: int, n: int) -> None:
         """Base-interface feedback: only a total is known, so spread it
-        evenly over shards. Keeps adaptation live for callers driving the
-        plain ``SlaBudgeter`` API (the inherited version would update the
-        unused scalar ``rate`` and silently freeze the per-shard caps);
-        ``observe_sharded`` with real per-shard counters is more accurate.
+        evenly over the shards that could actually have done the work.
+        Keeps adaptation live for callers driving the plain ``SlaBudgeter``
+        API (the inherited version would update the unused scalar ``rate``
+        and silently freeze the per-shard caps); ``observe_sharded`` with
+        real per-shard counters is more accurate.
+
+        ``down_mask`` (when wired — the control plane passes its health
+        ledger's ``shard_down_mask``) excludes dead shards from the spread:
+        a down shard traversed zero postings, so crediting it a 1/S share
+        would inflate its rate EWMA with phantom work and skew its budgets
+        after recovery. Down shards' EWMAs stay frozen instead.
         """
-        self.observe_sharded(
-            elapsed_ms,
-            np.full(self.n_shards, total_postings / max(self.n_shards, 1)),
-            n,
+        down = (
+            np.asarray(self.down_mask(), bool)
+            if self.down_mask is not None
+            else np.zeros(self.n_shards, bool)
         )
+        active = ~down
+        n_active = int(active.sum())
+        if n_active == 0:
+            # Whole fleet down: nothing did the work, nothing to learn.
+            self.policy.on_query_end(elapsed_ms, self.sla_ms)
+            return
+        per_shard = np.where(active, total_postings / n_active, 0.0)
+        self.observe_sharded(elapsed_ms, per_shard, n, active_mask=active)
 
 
 @dataclasses.dataclass

@@ -418,14 +418,16 @@ class ShardedEngine:
         mesh_axis: str = "shard",
         **engine_kwargs,
     ) -> "ShardedEngine":
-        """Build a sharded engine from saved artifacts (DESIGN.md §8).
+        """Build a sharded engine from saved artifacts (DESIGN.md §8, §10).
 
-        ``path`` is a ``clustered_index`` artifact (the global planner
-        needs the full index); ``shards_path`` optionally names a saved
+        ``path`` is a ``clustered_index`` artifact or a delta-chain head
+        (the global planner needs the full index, which a chain head
+        materializes on load); ``shards_path`` optionally names a saved
         ``index_shards`` artifact to reuse instead of re-partitioning —
         rejected when its recorded ``source_fingerprint`` does not match
-        the loaded index, so a stale shard set cannot silently serve
-        against a rebuilt index.
+        the loaded (materialized) index, so a stale shard set cannot
+        silently serve against a rebuilt *or extended* index: after an
+        append, re-carve shards against the new chain head.
         """
         from repro import index_io  # local: index_io sits above serving
 

@@ -294,6 +294,96 @@ def test_down_mask_in_sharded_engine_traverse():
         assert clean.exact or "budget" not in clean.shard_exit_reasons
 
 
+def test_base_observe_api_never_credits_down_shards():
+    """Bugfix regression: the base-API ``observe`` fallback used to spread
+    ``total_postings`` evenly over ALL shards, so a health-ledger-down
+    shard's rate EWMA absorbed phantom work. With the ledger mask wired,
+    a down shard's EWMA stays frozen and the spread covers active shards."""
+    down = np.zeros(4, bool)
+    down[1] = True
+    bud = ShardedSlaBudgeter(sla_ms=5.0, n_shards=4, down_mask=lambda: down)
+    r0 = bud.rates.copy()
+    bud.observe(10.0, total_postings=12000, n=3)
+    assert bud.rates[1] == r0[1]  # frozen through the outage
+    assert np.all(bud.rates[[0, 2, 3]] > r0[[0, 2, 3]])
+    # Spread is total / n_active (=3), per-lane over n=3 queries, 10 ms.
+    expect = (1 - bud.ema) * r0[0] + bud.ema * (12000 / 3 / 3 / 10.0)
+    assert np.isclose(bud.rates[0], expect)
+    # Whole fleet down: nothing learned, only the Reactive policy advances.
+    bud_all = ShardedSlaBudgeter(
+        sla_ms=5.0, n_shards=2, down_mask=lambda: np.ones(2, bool)
+    )
+    r_all = bud_all.rates.copy()
+    bud_all.observe(10.0, 5000, 2)
+    np.testing.assert_array_equal(bud_all.rates, r_all)
+    # Unwired budgeter keeps the old even-spread behaviour.
+    plain = ShardedSlaBudgeter(sla_ms=5.0, n_shards=4)
+    plain.observe(10.0, 12000, 3)
+    assert np.allclose(plain.rates, (1 - plain.ema) * 100.0 + plain.ema * (12000 / 4 / 3 / 10.0))
+
+    # The plane wires its ledger into the default budgeter automatically.
+    _, eng, _ = _small_setup(seed=5, n_ranges=6)
+    plane = ControlPlane(
+        eng, n_shards=3, spec=BucketSpec(max_batch=4), use_mesh=False
+    )
+    assert plane.budgeter.down_mask is not None
+    plane.mark_down(1)
+    frozen = plane.budgeter.rates[1]
+    plane.budgeter.observe(7.0, 9000, 2)  # base API, mid-outage
+    assert plane.budgeter.rates[1] == frozen
+
+
+def test_reshard_refused_then_deferred_through_outage():
+    """Bugfix regression: an explicit ``start_reshard`` during an outage is
+    refused with a clear error (a cutover would restack from dead arrays
+    and re-seed budgets from outage-skewed counters); the deferred variant
+    waits for recovery and then cuts over bitwise."""
+    idx, eng, queries = _small_setup(seed=19, n_ranges=6, n_queries=6)
+    plane = ControlPlane(
+        eng, n_shards=3, spec=BucketSpec(max_batch=4), use_mesh=False
+    )
+    plane.mark_down(1)
+    with pytest.raises(RuntimeError, match="outage"):
+        plane.start_reshard(np.asarray([0, 1, 4, 6]))
+    # Even an armed planner must not fire mid-outage.
+    plane.planner.load = np.asarray([9000.0, 100.0, 100.0])
+    plane.planner.batches_seen = 5
+    assert plane.planner.should_reshard()
+    assert not plane.maybe_reshard()
+    assert plane.reshard_task is None
+
+    # A bad request fails at request time even on the deferred path — it
+    # must never surface later out of the recovery mark_up.
+    with pytest.raises(ValueError, match="already the live layout"):
+        plane.start_reshard(plane.cuts.copy(), defer_if_degraded=True)
+    with pytest.raises(ValueError, match="rise strictly"):
+        plane.start_reshard(np.asarray([0, 4, 4, 6]), defer_if_degraded=True)
+    assert plane.deferred_reshard is None
+
+    # Deferred: queued, serving continues degraded, starts on recovery.
+    assert plane.start_reshard(
+        np.asarray([0, 1, 4, 6]), defer_if_degraded=True
+    ) is None
+    assert plane.stats()["reshard_deferred"]
+    served = plane.replay(queries, batch_size=4)
+    assert len(served) == len(queries) and plane.reshard_task is None
+    plane.mark_up(1)
+    assert plane.reshard_task is not None and plane.deferred_reshard is None
+    while plane.reshard_task is not None:
+        plane.drain_once()
+    np.testing.assert_array_equal(plane.cuts, [0, 1, 4, 6])
+    fresh = ShardedEngine(
+        eng, 3, use_mesh=False,
+        shards=shard_device_index(idx, cuts=np.asarray([0, 1, 4, 6])),
+    )
+    for q in queries[:4]:
+        plan = eng.plan(q)
+        a = plane.bengine.run_batch([plan])[0]
+        b = fresh.traverse(plan)
+        assert a.doc_ids.tolist() == b.doc_ids.tolist()
+        assert a.scores.tolist() == b.scores.tolist()
+
+
 # --------------------------------------------------- plane: online reshard
 
 

@@ -1,0 +1,594 @@
+"""Incremental index artifacts (DESIGN.md §10): delta segments, manifest
+chains, compaction, and the replayable topology journal.
+
+The tier-1 invariant under test is bitwise: appending ×N then compacting
+must equal a from-scratch build on the concatenated corpus at the base's
+arrangement-extension, shared quantizer, and *frozen* collection
+statistics — array for array, at either impact storage dtype, eager or
+memory-mapped. Journal replay must reconstruct cuts + ledger state across
+a process boundary with bitwise-identical serving.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro import index_io
+from repro.control import ControlPlane, TopologyJournal
+from repro.core.clustered_index import (
+    apply_delta,
+    build_index,
+    extend_index,
+    plan_delta,
+)
+from repro.core.range_daat import Engine
+from repro.data.synth import concat_corpora, make_corpus, make_query_log
+from repro.serving import BucketSpec
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+INDEX_FIELDS = (
+    "ptr", "docs", "impacts",
+    "blk_start", "blk_len", "blk_maxdoc", "blk_maximp", "blk_term", "blk_range",
+    "tr_ptr", "tr_range", "tr_blk_start", "tr_blk_end", "tr_bound",
+    "term_bound", "bounds_dense",
+)
+
+
+@pytest.fixture(scope="module")
+def base_corpus():
+    return make_corpus(n_docs=900, n_terms=700, n_topics=4, mean_doc_len=50, seed=7)
+
+
+@pytest.fixture(scope="module")
+def deltas():
+    return [
+        make_corpus(n_docs=150, n_terms=700, n_topics=4, mean_doc_len=50, seed=21),
+        make_corpus(n_docs=90, n_terms=700, n_topics=4, mean_doc_len=50, seed=22),
+        make_corpus(n_docs=60, n_terms=700, n_topics=4, mean_doc_len=50, seed=23),
+    ]
+
+
+@pytest.fixture(scope="module")
+def base_index(base_corpus):
+    return build_index(base_corpus, n_ranges=6, strategy="clustered")
+
+
+def _assert_index_equal(a, b):
+    for f in INDEX_FIELDS:
+        x, y = np.asarray(getattr(a, f)), np.asarray(getattr(b, f))
+        assert x.dtype == y.dtype, f
+        np.testing.assert_array_equal(x, y, err_msg=f)
+    np.testing.assert_array_equal(
+        a.arrangement.doc_order, b.arrangement.doc_order
+    )
+    np.testing.assert_array_equal(a.range_ends, b.range_ends)
+    assert (a.n_docs, a.n_terms) == (b.n_docs, b.n_terms)
+    assert a.fingerprint() == b.fingerprint()
+
+
+# --------------------------------------------------------------------------
+# Core: extend_index == fresh build, bitwise
+# --------------------------------------------------------------------------
+
+
+def test_extend_index_matches_fresh_build_bitwise(base_corpus, base_index, deltas):
+    """Append x2 in memory == one from-scratch build on the concatenated
+    corpus at the extended arrangement / shared quantizer / frozen stats."""
+    ext1 = extend_index(base_index, deltas[0], n_ranges=2, seed=5)
+    ext2 = extend_index(ext1, deltas[1], n_ranges=1, seed=6)
+    assert ext2.n_docs == base_index.n_docs + 240
+    assert ext2.n_ranges == base_index.n_ranges + 3
+    # Frozen stats travel untouched through the chain.
+    assert ext2.stats is base_index.stats
+
+    cat = concat_corpora(concat_corpora(base_corpus, deltas[0]), deltas[1])
+    fresh = build_index(
+        cat,
+        arrangement=ext2.arrangement,
+        quantizer=base_index.quantizer,
+        stats=base_index.stats,
+        params=base_index.bm25,
+    )
+    _assert_index_equal(ext2, fresh)
+
+
+def test_extended_index_serves_and_finds_new_docs(base_index, deltas):
+    """Document-ordered invariants hold: the extended engine serves, and
+    appended docs (docids >= old n_docs) are retrievable."""
+    ext = extend_index(base_index, deltas[0], n_ranges=2, seed=5)
+    eng = Engine(ext, k=10)
+    log = make_query_log(deltas[0], n_queries=8, seed=30)
+    hit_new = 0
+    for i in range(log.n_queries):
+        res = eng.traverse(eng.plan(log.terms[i]))
+        ids = np.asarray(res.state.ids)
+        ids = ids[ids >= 0]
+        assert ids.size > 0
+        hit_new += int((ids >= base_index.n_docs).sum())
+    assert hit_new > 0  # delta-topic queries surface delta documents
+
+
+def test_extend_validations(base_corpus, base_index, deltas):
+    import dataclasses
+
+    with pytest.raises(ValueError, match="vocabulary|terms"):
+        extend_index(
+            base_index,
+            make_corpus(n_docs=50, n_terms=300, n_topics=2, seed=1),
+        )
+    empty = dataclasses.replace(
+        deltas[0], n_docs=0, doc_ptr=np.zeros(1, np.int64),
+        doc_terms=np.empty(0, np.int32), doc_tfs=np.empty(0, np.int32),
+        doc_topic=np.empty(0, np.int32),
+    )
+    with pytest.raises(ValueError, match="empty"):
+        extend_index(base_index, empty)
+    # Pre-§10 index (no frozen stats) cannot be extended.
+    statless = dataclasses.replace(base_index, stats=None)
+    with pytest.raises(ValueError, match="stats"):
+        extend_index(statless, deltas[0])
+    # A delta planned against another index is refused at apply time.
+    other = build_index(base_corpus, n_ranges=4, strategy="clustered", seed=9)
+    delta = plan_delta(other, deltas[0])
+    with pytest.raises(ValueError, match="planned against"):
+        apply_delta(base_index, delta)
+
+
+# --------------------------------------------------------------------------
+# Artifacts: chain round-trip, compaction, crash recovery
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impact_dtype", ["int32", "int8"])
+@pytest.mark.parametrize("mmap", [False, True])
+def test_chain_roundtrip_and_compact_bitwise(
+    base_corpus, base_index, deltas, tmp_path, impact_dtype, mmap
+):
+    """append xN -> load_chain == compact == fresh build, bitwise."""
+    base = str(tmp_path / "base")
+    index_io.save_index(base_index, base, impact_dtype=impact_dtype)
+    parent, cat = base, base_corpus
+    for i, d in enumerate(deltas):
+        head = str(tmp_path / f"delta{i}")
+        ext = index_io.append_index(parent, d, head, n_ranges=1 + i % 2, seed=40 + i)
+        cat = concat_corpora(cat, d)
+        parent = head
+
+    manifest = index_io.read_manifest(parent)
+    assert manifest["chain_length"] == len(deltas)
+    assert manifest["impact_dtype"] == impact_dtype
+    assert manifest["n_docs_total"] == cat.n_docs
+
+    loaded = index_io.load_index(parent, mmap=mmap)
+    assert loaded.fingerprint() == ext.fingerprint() == manifest["fingerprint"]
+
+    out = str(tmp_path / "compacted")
+    index_io.compact(parent, out)
+    assert index_io.read_manifest(out)["impact_dtype"] == impact_dtype
+    compacted = index_io.load_index(out, mmap=mmap)
+
+    fresh = build_index(
+        cat,
+        arrangement=ext.arrangement,
+        quantizer=base_index.quantizer,
+        stats=base_index.stats,
+        params=base_index.bm25,
+    )
+    _assert_index_equal(loaded, fresh)
+    _assert_index_equal(compacted, fresh)
+    # Frozen stats round-trip through the chain and the compacted base.
+    for idx in (loaded, compacted):
+        assert idx.stats is not None
+        assert idx.stats.n_docs == base_index.stats.n_docs
+        assert idx.stats.avg_doc_len == base_index.stats.avg_doc_len
+        np.testing.assert_array_equal(idx.stats.df, base_index.stats.df)
+    assert index_io.validate_artifact(parent) == []
+    assert index_io.validate_artifact(out) == []
+
+
+def test_engine_from_chain_head_serves_bitwise(base_index, deltas, tmp_path):
+    base = str(tmp_path / "base")
+    head = str(tmp_path / "head")
+    index_io.save_index(base_index, base, impact_dtype="int8")
+    ext = index_io.append_index(base, deltas[0], head, n_ranges=2, seed=5)
+
+    eng = Engine.from_artifact(head, k=10)
+    assert eng.impact_dtype == "int8"  # inherits the chain head's dtype
+    ref = Engine(ext, k=10)
+    log = make_query_log(deltas[0], n_queries=6, seed=31)
+    for i in range(log.n_queries):
+        a = eng.traverse(eng.plan(log.terms[i]))
+        b = ref.traverse(ref.plan(log.terms[i]))
+        assert np.asarray(a.state.ids).tolist() == np.asarray(b.state.ids).tolist()
+        assert np.asarray(a.state.vals).tolist() == np.asarray(b.state.vals).tolist()
+
+
+def test_crash_mid_append_staging_ignored_and_cleaned(
+    base_index, deltas, tmp_path
+):
+    """A crashed append's partial staging dir neither corrupts loads nor
+    survives the sweep; a *fresh* staging dir is left alone."""
+    base = str(tmp_path / "base")
+    head = str(tmp_path / "head")
+    index_io.save_index(base_index, base)
+    index_io.append_index(base, deltas[0], head)
+
+    stale = str(tmp_path / "head.tmp-CRASHED")
+    os.makedirs(os.path.join(stale, "arrays"))
+    with open(os.path.join(stale, "arrays", "docs.npy"), "w") as f:
+        f.write("partial garbage")
+    # Readers never look at staging dirs: the chain stays healthy.
+    assert index_io.load_index(head).n_docs == base_index.n_docs + deltas[0].n_docs
+    assert index_io.validate_artifact(head) == []
+
+    removed = index_io.clean_stale_staging(head, max_age_s=0.0)
+    assert "head.tmp-CRASHED" in removed
+    assert not os.path.exists(stale)
+    # Default window protects a concurrent save's live staging area.
+    fresh = str(tmp_path / "head.tmp-LIVE")
+    os.makedirs(fresh)
+    assert index_io.clean_stale_staging(head) == []
+    assert os.path.isdir(fresh)
+
+    # A re-run append on the same target publishes cleanly over the crash.
+    index_io.append_index(base, deltas[0], head, overwrite=True)
+    assert index_io.validate_artifact(head) == []
+
+
+def test_mis_chained_and_corrupt_deltas_refused(
+    base_corpus, base_index, deltas, tmp_path
+):
+    base = str(tmp_path / "base")
+    other = str(tmp_path / "other")
+    index_io.save_index(base_index, base)
+    other_index = build_index(base_corpus, n_ranges=4, strategy="clustered", seed=9)
+    index_io.save_index(other_index, other)
+
+    # save_delta refuses a parent whose fingerprint is not the delta's.
+    delta = plan_delta(base_index, deltas[0])
+    with pytest.raises(index_io.ArtifactError, match="planned against"):
+        index_io.save_delta(delta, str(tmp_path / "d"), other, "whatever")
+
+    head = str(tmp_path / "head")
+    index_io.append_index(base, deltas[0], head)
+
+    # Broken parent pointer -> CorruptArtifactError (load + validate).
+    mpath = os.path.join(head, "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    good_parent = manifest["parent"]
+    manifest["parent"] = "../nowhere"
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(index_io.CorruptArtifactError):
+        index_io.load_index(head)
+    assert index_io.validate_artifact(head) != []
+
+    # Tampered result fingerprint -> materialization mismatch raises.
+    manifest["parent"] = good_parent
+    manifest["fingerprint"] = "0" * 16
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(index_io.CorruptArtifactError, match="fingerprint"):
+        index_io.load_index(head)
+
+
+def test_pre_incremental_artifact_cannot_extend(base_index, deltas, tmp_path):
+    """An artifact saved before §10 (no collection stats) loads fine but
+    refuses extension with a clear error; a HALF-present stats record is
+    corruption and fails at load time instead."""
+    base = str(tmp_path / "base")
+    index_io.save_index(base_index, base)
+    mpath = os.path.join(base, "manifest.json")
+    with open(mpath) as f:
+        saved = json.load(f)
+
+    # Exactly one of (manifest collection, stats_df array) present: corrupt.
+    for drop in ("collection", "stats_df"):
+        manifest = json.loads(json.dumps(saved))
+        if drop == "collection":
+            del manifest["collection"]
+        else:
+            del manifest["arrays"]["stats_df"]
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+        with pytest.raises(index_io.CorruptArtifactError, match="stats"):
+            index_io.load_index(base)
+
+    # Both absent: a legitimate pre-§10 artifact — loads, refuses extension.
+    manifest = json.loads(json.dumps(saved))
+    del manifest["collection"]
+    del manifest["arrays"]["stats_df"]
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    loaded = index_io.load_index(base)
+    assert loaded.stats is None
+    assert loaded.fingerprint() == base_index.fingerprint()
+    with pytest.raises(ValueError, match="stats"):
+        index_io.append_index(base, deltas[0], str(tmp_path / "d"))
+
+
+# --------------------------------------------------------------------------
+# Topology journal
+# --------------------------------------------------------------------------
+
+
+def test_topology_journal_records_and_torn_tail(tmp_path):
+    j = TopologyJournal(str(tmp_path / "journal.jsonl"))
+    assert j.records() == [] and not j.exists
+    j.append({"kind": "health", "event": "down", "shard": 1, "replica": None})
+    j.append({"kind": "reshard", "cuts": [0, 2, 6]})
+    recs = j.records()
+    assert [r["seq"] for r in recs] == [0, 1]
+    assert recs[1]["cuts"] == [0, 2, 6]
+    # Torn final line (crash mid-append) is ignored...
+    with open(j.path, "a") as f:
+        f.write('{"kind": "resha')
+    assert len(j.records()) == 2
+    assert j.next_seq() == 2
+    # ...but a corrupt line in the *middle* is a hard error.
+    with open(j.path, "a") as f:
+        f.write('rd"\n{"kind": "health", "event": "up", "shard": 1}\n')
+    with pytest.raises(ValueError, match="corrupt"):
+        j.records()
+
+
+def test_journal_append_after_torn_tail_truncates_not_concatenates(tmp_path):
+    """Bug regression: appending after a crash-torn tail must truncate the
+    uncommitted fragment first — naive 'a'-mode writes would merge the new
+    record into the torn line, silently losing it (or corrupting the
+    journal for every later read)."""
+    j = TopologyJournal(str(tmp_path / "journal.jsonl"))
+    j.append({"kind": "health", "event": "down", "shard": 0, "replica": None})
+    with open(j.path, "a") as f:
+        f.write('{"kind": "resha')  # crash mid-append, no newline
+    # A restarted writer (fresh object, like a fresh process) appends twice.
+    j2 = TopologyJournal(j.path)
+    j2.append({"kind": "reshard", "cuts": [0, 2, 4]})
+    j2.append({"kind": "health", "event": "up", "shard": 0, "replica": None})
+    recs = j2.records()
+    assert [r["kind"] for r in recs] == ["health", "reshard", "health"]
+    assert [r["seq"] for r in recs] == [0, 1, 2]
+    assert recs[1]["cuts"] == [0, 2, 4]
+
+
+def test_plane_journal_replay_reconstructs_cuts_and_ledger(
+    base_index, tmp_path
+):
+    """The §10 acceptance, in-process: a second plane opened on the same
+    artifact with replay=True resumes at the journaled layout + ledger and
+    serves bitwise-identically."""
+    path = str(tmp_path / "art")
+    index_io.save_index(base_index, path)
+    kw = dict(
+        n_shards=3, use_mesh=False, spec=BucketSpec(max_batch=4),
+        engine_kwargs=dict(k=5),
+    )
+    plane = ControlPlane.from_artifact(path, **kw)
+    assert plane.journal is not None and not plane.journal.exists
+
+    plane.start_reshard(np.asarray([0, 1, 4, 6]))
+    while plane.reshard_task is not None:
+        plane.drain_once()
+    plane.mark_down(1)
+    plane.mark_up(1)
+    plane.mark_down(2)
+    assert len(plane.journal.records()) == 4
+
+    # "Process restart": a fresh plane over the same artifact.
+    plane2 = ControlPlane.from_artifact(path, replay=True, **kw)
+    np.testing.assert_array_equal(plane2.cuts, plane.cuts)
+    np.testing.assert_array_equal(plane2.health._up, plane.health._up)
+    assert plane2.reshards_completed == 1
+    # Replay is idempotent: nothing was re-journaled.
+    assert len(plane.journal.records()) == 4
+
+    log = make_query_log(
+        make_corpus(n_docs=200, n_terms=700, n_topics=4, seed=2), n_queries=6,
+        seed=3,
+    )
+    for i in range(log.n_queries):
+        a = plane.bengine.run_batch([plane.engine.plan(log.terms[i])])[0]
+        b = plane2.bengine.run_batch([plane2.engine.plan(log.terms[i])])[0]
+        assert a.doc_ids.tolist() == b.doc_ids.tolist()
+        assert a.scores.tolist() == b.scores.tolist()
+        assert a.shard_exit_reasons == b.shard_exit_reasons
+
+    # Dying mid-reshard: an *uncommitted* cutover leaves no record, so a
+    # restart resumes at the last committed layout.
+    plane.mark_up(2)
+    plane.start_reshard(np.asarray([0, 2, 4, 6]))  # never drained to cutover
+    plane3 = ControlPlane.from_artifact(path, replay=True, **kw)
+    np.testing.assert_array_equal(plane3.cuts, [0, 1, 4, 6])
+    assert plane3.health.all_up
+
+
+def test_replay_skips_health_records_from_before_last_reshard(
+    base_index, tmp_path
+):
+    """Health records journaled before a committed reshard reference the
+    OLD layout's shard ids (the live cutover reset the ledger); replay
+    must skip them — including ids the new, smaller layout doesn't have —
+    and still count every committed reshard."""
+    path = str(tmp_path / "art")
+    index_io.save_index(base_index, path)
+    kw = dict(
+        use_mesh=False, spec=BucketSpec(max_batch=4), engine_kwargs=dict(k=5)
+    )
+    plane = ControlPlane.from_artifact(path, n_shards=4, **kw)
+    plane.mark_down(3)  # only valid under the 4-shard layout
+    plane.mark_up(3)
+    plane.start_reshard(np.asarray([0, 1, base_index.n_ranges]))  # 4 -> 2
+    while plane.reshard_task is not None:
+        plane.drain_once()
+    plane.mark_down(1)  # post-reshard: names a 2-shard-layout shard
+
+    plane2 = ControlPlane.from_artifact(path, n_shards=2, replay=True, **kw)
+    np.testing.assert_array_equal(plane2.cuts, [0, 1, base_index.n_ranges])
+    assert plane2.reshards_completed == 1
+    assert plane2.health.shard_down_mask().tolist() == [False, True]
+
+
+def test_plane_refuses_foreign_journal(base_corpus, base_index, tmp_path):
+    """Records stamped with another index's fingerprint must not replay."""
+    path = str(tmp_path / "art")
+    index_io.save_index(base_index, path)
+    plane = ControlPlane.from_artifact(
+        path, n_shards=2, use_mesh=False, engine_kwargs=dict(k=5)
+    )
+    plane.mark_down(0)
+
+    other = build_index(base_corpus, n_ranges=4, strategy="clustered", seed=9)
+    opath = str(tmp_path / "other")
+    index_io.save_index(other, opath)
+    # Copy the journal under the other artifact to simulate a mixed-up tree.
+    import shutil
+
+    shutil.copy(
+        os.path.join(path, "journal.jsonl"), os.path.join(opath, "journal.jsonl")
+    )
+    with pytest.raises(index_io.ArtifactError, match="foreign"):
+        ControlPlane.from_artifact(
+            opath, n_shards=2, replay=True, use_mesh=False,
+            engine_kwargs=dict(k=5),
+        )
+
+
+def test_plane_from_chain_head_with_journal(base_index, deltas, tmp_path):
+    """The journal lives with the chain head it describes: opening the head
+    journals against the *materialized* fingerprint."""
+    base = str(tmp_path / "base")
+    head = str(tmp_path / "head")
+    index_io.save_index(base_index, base)
+    ext = index_io.append_index(base, deltas[0], head, n_ranges=2, seed=5)
+    plane = ControlPlane.from_artifact(
+        head, n_shards=3, use_mesh=False, engine_kwargs=dict(k=5)
+    )
+    assert plane.engine.index.fingerprint() == ext.fingerprint()
+    plane.mark_down(2)
+    assert plane.journal.records()[0]["fingerprint"] == ext.fingerprint()
+    plane2 = ControlPlane.from_artifact(
+        head, n_shards=3, replay=True, use_mesh=False, engine_kwargs=dict(k=5)
+    )
+    assert plane2.health.shard_down_mask().tolist() == [False, False, True]
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+
+
+def test_cli_append_compact_log(tmp_path, capsys):
+    from repro.index_io.__main__ import main as cli
+
+    base = str(tmp_path / "idx")
+    head = str(tmp_path / "idx.d1")
+    assert cli([
+        "build", "--out", base, "--reader", "synth",
+        "--n-docs", "400", "--n-terms", "300", "--n-topics", "4",
+        "--n-ranges", "4", "--impact-dtype", "int8",
+    ]) == 0
+    assert cli([
+        "append", "--parent", base, "--out", head, "--reader", "synth",
+        "--n-docs", "80", "--n-terms", "300", "--n-topics", "4",
+        "--seed", "11",
+    ]) == 0
+    out = capsys.readouterr().out
+    assert "chain length 1" in out
+    assert cli(["log", head]) == 0
+    out = capsys.readouterr().out
+    assert "clustered_index base" in out and "delta +80 docs" in out
+    assert cli(["validate", head]) == 0
+    assert cli(["inspect", head]) == 0
+    compacted = str(tmp_path / "idx.compact")
+    assert cli(["compact", head, "--out", compacted]) == 0
+    assert cli(["validate", compacted]) == 0
+    # Compacted base serves the same index as the chain head.
+    assert (
+        index_io.load_index(compacted).fingerprint()
+        == index_io.read_manifest(head)["fingerprint"]
+    )
+    # Appending against a missing parent is a clean exit-1, not a traceback.
+    assert cli([
+        "append", "--parent", str(tmp_path / "nope"), "--out",
+        str(tmp_path / "x"), "--n-docs", "10", "--n-terms", "300",
+    ]) == 1
+
+
+# --------------------------------------------------------------------------
+# Journal replay across a real process boundary, forced 4-device CPU mesh
+# --------------------------------------------------------------------------
+
+_JOURNAL_SUBPROC = r"""
+import os, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, numpy as np
+from repro import index_io
+from repro.control import ControlPlane
+from repro.core.clustered_index import build_index
+from repro.data.synth import make_corpus, make_query_log
+from repro.serving import BucketSpec
+
+assert jax.device_count() == 4
+path, phase = sys.argv[1], sys.argv[2]
+corpus = make_corpus(n_docs=900, n_terms=700, n_topics=4, mean_doc_len=50, seed=7)
+log = make_query_log(corpus, n_queries=8, seed=8)
+queries = [log.terms[i] for i in range(log.n_queries)]
+kw = dict(n_shards=4, spec=BucketSpec(max_batch=4), engine_kwargs=dict(k=5))
+
+if phase == "write":
+    idx = build_index(corpus, n_ranges=8, strategy="clustered")
+    index_io.save_index(idx, path)
+    plane = ControlPlane.from_artifact(path, **kw)
+    assert plane.sengine.mesh is not None  # 4 shards on 4 devices
+    plane.start_reshard(np.asarray([0, 1, 3, 6, 8]))
+    while plane.reshard_task is not None:
+        plane.submit(queries[0]); plane.drain_once()
+    plane.mark_down(3)
+    served = plane.replay(queries, batch_size=4)
+    rows = [[s.result.doc_ids.tolist(), s.result.scores.tolist(),
+             list(s.result.shard_exit_reasons), s.result.fidelity_bound,
+             bool(s.result.exact)] for s in sorted(served, key=lambda s: s.rid)]
+    import json
+    with open(path + ".expect.json", "w") as f:
+        json.dump({"cuts": plane.cuts.tolist(),
+                   "up": plane.health._up.tolist(), "rows": rows}, f)
+    print("WRITE_OK", len(plane.journal.records()))
+else:
+    import json
+    with open(path + ".expect.json") as f:
+        expect = json.load(f)
+    plane = ControlPlane.from_artifact(path, replay=True, **kw)
+    assert plane.cuts.tolist() == expect["cuts"], plane.cuts
+    assert plane.health._up.tolist() == expect["up"]
+    served = plane.replay(queries, batch_size=4)
+    rows = [[s.result.doc_ids.tolist(), s.result.scores.tolist(),
+             list(s.result.shard_exit_reasons), s.result.fidelity_bound,
+             bool(s.result.exact)] for s in sorted(served, key=lambda s: s.rid)]
+    assert rows == expect["rows"]
+    print("REPLAY_OK", len(queries))
+"""
+
+
+@pytest.mark.slow
+def test_journal_replay_across_process_boundary_subprocess(tmp_path):
+    """Tentpole acceptance: a broker process dies (here: exits) after a
+    journaled reshard + outage; a NEW process replays the journal and
+    serves the degraded layout bitwise-identically on a forced 4-device
+    CPU mesh."""
+    path = str(tmp_path / "art")
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "JAX_PLATFORMS": "cpu"}
+    for phase, marker in (("write", "WRITE_OK"), ("replay", "REPLAY_OK")):
+        out = subprocess.run(
+            [sys.executable, "-c", _JOURNAL_SUBPROC, path, phase],
+            capture_output=True, text=True, env=env, cwd=_REPO_ROOT,
+            timeout=900,
+        )
+        assert marker in out.stdout, out.stdout + out.stderr

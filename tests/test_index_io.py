@@ -279,6 +279,48 @@ def test_wrong_kind_raises(index, artifact_path, tmp_path):
         index_io.load_shards(artifact_path)
 
 
+def test_concurrent_overwrite_readers_survive_publish_race(index, tmp_path):
+    """Bugfix regression: the rename-aside overwrite admits a briefly-absent
+    path, so readers (read_manifest / load_index / validate) must retry once
+    on ENOENT instead of crashing on a healthy artifact. Stress: one writer
+    republishing in a loop against concurrent readers."""
+    import threading
+
+    path = str(tmp_path / "live")
+    index_io.save_index(index, path)
+    stop = threading.Event()
+    errors: list = []
+
+    def writer():
+        try:
+            for _ in range(12):
+                index_io.save_index(index, path, overwrite=True)
+        except Exception as e:  # noqa: BLE001 — surfaced via `errors`
+            errors.append(("writer", repr(e)))
+        finally:
+            stop.set()
+
+    def reader():
+        try:
+            while not stop.is_set():
+                manifest = index_io.read_manifest(path)
+                assert manifest["fingerprint"] == index.fingerprint()
+                loaded = index_io.load_index(path, mmap=True)
+                assert loaded.fingerprint() == index.fingerprint()
+        except Exception as e:  # noqa: BLE001 — surfaced via `errors`
+            errors.append(("reader", repr(e)))
+
+    threads = [threading.Thread(target=writer)] + [
+        threading.Thread(target=reader) for _ in range(3)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=300)
+    assert errors == []
+    assert index_io.validate_artifact(path) == []
+
+
 def test_overwrite_guard(index, artifact_path):
     with pytest.raises(index_io.ArtifactError, match="overwrite"):
         index_io.save_index(index, artifact_path)
