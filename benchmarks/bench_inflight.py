@@ -1,0 +1,170 @@
+"""In-flight (slot-swapping) serving vs micro-batching at saturating load.
+
+Both servers get the identical query log submitted in one burst (offered
+load far above capacity) and drain it completely; per-query latency is
+queue wait + service (identical attribution on both paths), throughput is
+end-to-end wall clock.
+
+The effect under test: a micro-batch's vmapped dispatch runs until its
+*slowest* lane finishes (``lax.cond`` lowers to ``select``), so a batch
+pays ``batch x max(ranges)`` lane-iterations while the straggler holds
+finished batchmates' slots idle. The in-flight loop refills a lane the
+quantum after it exits, so lane-iterations track ``sum(ranges)`` instead —
+decisively better q/s and p99 when per-query work is skewed, which safe
+termination makes the common case on clustered indexes.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.serving import (
+    BatchEngine,
+    BucketSpec,
+    InflightServer,
+    MicroBatchServer,
+    SlaBudgeter,
+)
+
+SLOTS = 8  # lanes: micro-batch max_batch == in-flight n_slots
+QUANTUM = 2
+BUDGET = 20_000  # postings — the anytime knob for the budgeted rows
+LIGHT_PER_HEAVY = 3  # skewed mix: navigational 1-term : exploratory log
+
+
+class FixedBudgeter(SlaBudgeter):
+    """Constant postings cap: makes the two servers' budgets identical."""
+
+    def __init__(self, cap):
+        super().__init__(sla_ms=float("inf"))
+        self.cap = cap
+
+    def budgets(self, n, plans=None):
+        return np.full(n, self.cap, dtype=np.int32)
+
+
+def _row(server, lanes, times_ms, wall_s, n, skew, budget="unlimited", **extra):
+    return {
+        "bench": "inflight",
+        "server": server,
+        "lanes": lanes,
+        "budget": budget,
+        "qps": round(n / wall_s, 2),
+        **{k + "_ms": round(v, 3) for k, v in common.percentiles(times_ms).items()},
+        "ranges_skew_p99_over_p50": skew,
+        **extra,
+    }
+
+
+def _drain_micro(eng, queries, budgeter):
+    beng = BatchEngine(eng, BucketSpec(max_batch=SLOTS))
+    plans = [eng.plan(q) for q in queries]
+    beng.warmup(sorted({beng.spec.width_bucket(p.blk_tab.shape[1]) for p in plans}))
+    srv = MicroBatchServer(beng, budgeter, max_batch=SLOTS)
+    t0 = time.perf_counter()
+    for q in queries:
+        srv.submit(q)
+    served = []
+    while srv.pending:
+        served.extend(srv.drain_once())
+    wall = time.perf_counter() - t0
+    return [s.latency_ms for s in served], wall, served
+
+
+def _drain_inflight(eng, queries, budgeter):
+    beng = BatchEngine(eng, BucketSpec(max_batch=SLOTS))
+    # Warm the (n_slots, width) programs outside the timed region.
+    warm = InflightServer(
+        beng, SlaBudgeter(sla_ms=float("inf")), n_slots=SLOTS, quantum=QUANTUM
+    )
+    warm.replay(queries[: 2 * SLOTS])
+    srv = InflightServer(beng, budgeter, n_slots=SLOTS, quantum=QUANTUM)
+    t0 = time.perf_counter()
+    for q in queries:
+        srv.submit(q)
+    served = srv.run_until_idle()
+    wall = time.perf_counter() - t0
+    return [s.latency_ms for s in served], wall, served
+
+
+def _skewed_mix(ql, n_terms: int, seed: int = 1):
+    """Interleave exploratory log queries with 3x as many navigational
+    1-term queries. The light queries safe-terminate after a few ranges;
+    the heavy ones traverse most of the order — the per-query work skew
+    that makes a micro-batch convoy around its slowest lane."""
+    rng = np.random.default_rng(seed)
+    heavy = [ql.terms[i] for i in range(ql.n_queries)]
+    light = [
+        np.asarray([t], np.int32)
+        for t in rng.integers(0, n_terms, size=LIGHT_PER_HEAVY * len(heavy))
+    ]
+    mix = heavy + light
+    rng.shuffle(mix)
+    return mix
+
+
+def run(small: bool | None = None):
+    if small is None:
+        small = os.environ.get("REPRO_BENCH_SMALL") == "1"
+    if small:
+        from repro.data.synth import make_corpus, make_query_log
+
+        corpus = make_corpus(n_docs=8000, n_terms=3000, n_topics=8,
+                             mean_doc_len=120, seed=0)
+        ql = make_query_log(corpus, n_queries=24, seed=7)
+        idx = common.build_index_cached(
+            corpus, cache_dir=common.CACHE, n_ranges=16, strategy="clustered",
+        )
+        n_terms = 3000
+    else:
+        corpus = common.bench_corpus()
+        ql = common.bench_queries(corpus, n=32, seed=7)
+        idx = common.bench_index(corpus, "clustered_bp")
+        n_terms = common.N_TERMS
+    eng = common.make_engine(idx, k=10)
+    queries = _skewed_mix(ql, n_terms)
+    n = len(queries)
+
+    # Workload skew (what slot-swapping exploits): ranges processed to safe
+    # termination per query, p99/p50.
+    ranges = [
+        int(eng.traverse(eng.plan(q)).ranges_processed) for q in queries
+    ]
+    pr = common.percentiles(ranges)
+    skew = round(pr["p99"] / max(pr["p50"], 1e-9), 2)
+
+    rows = []
+    for budget, label, mk in (
+        (None, "unlimited", lambda: SlaBudgeter(sla_ms=float("inf"))),
+        (BUDGET, str(BUDGET), lambda: FixedBudgeter(BUDGET)),
+    ):
+        times, wall, served = _drain_micro(eng, queries, mk())
+        rows.append(_row(f"microbatch-{SLOTS}", SLOTS, times, wall, n, skew,
+                         budget=label))
+        times, wall, served = _drain_inflight(eng, queries, mk())
+        mean_q = round(float(np.mean([s.quanta for s in served])), 2)
+        rows.append(_row(f"inflight-{SLOTS}x{QUANTUM}", SLOTS, times, wall, n,
+                         skew, budget=label, mean_quanta=mean_q))
+
+    for r in rows:
+        if r["server"].startswith("inflight"):
+            base = next(
+                x for x in rows
+                if x["server"].startswith("microbatch") and x["budget"] == r["budget"]
+            )
+            r["qps_vs_microbatch"] = round(r["qps"] / max(base["qps"], 1e-9), 2)
+            r["p99_vs_microbatch"] = round(
+                r["p99_ms"] / max(base["p99_ms"], 1e-9), 3
+            )
+    common.save_result("inflight", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run(small="--small" in sys.argv):
+        print(row)

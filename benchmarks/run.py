@@ -34,6 +34,7 @@ MODULES = [
     ("S3_index_io", "benchmarks.bench_index_io"),
     ("S4_control_plane", "benchmarks.bench_control_plane"),
     ("S5_incremental", "benchmarks.bench_incremental"),
+    ("S6_inflight", "benchmarks.bench_inflight"),
     ("T8_failures", "benchmarks.bench_failures"),
     ("Q_quantization", "benchmarks.bench_quantization"),
 ]
@@ -131,6 +132,16 @@ def _headline(name: str, rows) -> tuple[float, str]:
                 f"speedup={reb['speedup_vs_rebuild']}x_"
                 f"reopen{deep['chain_length']}={deep['ms']}ms_"
                 f"compacted={comp['ms']}ms_parity={comp['parity_bitwise']}",
+            )
+        if name == "S6_inflight":
+            r = next(
+                x for x in rows if x["server"].startswith("inflight")
+                and x["budget"] == "unlimited"
+            )
+            return (
+                1e6 / max(r["qps"], 1e-9),
+                f"qps={r['qps']}_vs_micro={r['qps_vs_microbatch']}x"
+                f"_p99={r['p99_vs_microbatch']}x",
             )
         if name == "Q_quantization":
             r8 = next(x for x in rows if x["bits"] == 8)

@@ -62,8 +62,8 @@ class _PlaneServer(MicroBatchServer):
     def _run_batch(self, plans, budgets):
         return self.plane._dispatch(plans, budgets)
 
-    def _observe(self, batch_ms, results):
-        self.plane._observe(batch_ms, results)
+    def _observe(self, batch_ms, results, latencies_ms=None):
+        self.plane._observe(batch_ms, results, latencies_ms=latencies_ms)
 
 
 class ControlPlane:
@@ -252,11 +252,12 @@ class ControlPlane:
             down_mask=down if down.any() else None,
         )
 
-    def _observe(self, batch_ms, results) -> None:
+    def _observe(self, batch_ms, results, latencies_ms=None) -> None:
         per_shard = np.sum([r.shard_postings for r in results], axis=0)
         up = ~self.health.shard_down_mask()
         self.budgeter.observe_sharded(
-            batch_ms, per_shard, len(results), active_mask=up
+            batch_ms, per_shard, len(results), active_mask=up,
+            latencies_ms=latencies_ms,
         )
         # The reshard planner only learns from a healthy fleet: a down
         # shard's zero counters say nothing about where load lives, and

@@ -33,15 +33,21 @@ __all__ = [
     "IMPACT_BIAS",
     "IMPACT_DTYPES",
     "TopKState",
+    "TraverseCarry",
     "TraverseResult",
     "QueryPlan",
     "Engine",
     "init_state",
+    "init_carry",
+    "batched_init_carry",
+    "carry_done",
+    "carry_result",
     "merge_topk",
     "pack_impacts",
     "score_range_step",
     "device_traverse",
     "batched_traverse",
+    "batched_traverse_resume",
     "topk_docs",
     "batched_topk_docs",
     "exit_reason",
@@ -195,37 +201,117 @@ class TraverseResult(NamedTuple):
     exit_budget: jnp.ndarray  # bool — stopped by postings budget / fixed-n
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("s_pad", "k", "impl", "prune_blocks", "safe_stop", "interpret"),
-)
-def device_traverse(
+class TraverseCarry(NamedTuple):
+    """Resumable mid-flight traversal state (DESIGN.md §11).
+
+    Exactly the ``device_traverse`` while_loop carry: the cursor into the
+    processing order, the running top-k heap state (whose ``postings``
+    counter is cumulative, so the postings budget keeps its meaning across
+    calls), and the two exit flags. Every leaf is int32/bool, so a carry
+    round-trips bitwise through host numpy — a query stepped ``quantum``
+    ranges at a time over many dispatches finishes with leaves identical
+    to one uninterrupted ``device_traverse`` call.
+    """
+
+    i: jnp.ndarray  # int32 — cursor into the processing order
+    state: TopKState
+    exit_safe: jnp.ndarray  # bool
+    exit_budget: jnp.ndarray  # bool
+
+
+def init_carry(k: int) -> TraverseCarry:
+    """A fresh single-query carry (cursor 0, empty heap, no exit flags)."""
+    return TraverseCarry(
+        i=jnp.zeros((), jnp.int32),
+        state=init_state(k),
+        exit_safe=jnp.zeros((), bool),
+        exit_budget=jnp.zeros((), bool),
+    )
+
+
+def batched_init_carry(n: int, k: int, parked: bool = False) -> TraverseCarry:
+    """[n]-lane host (numpy) carry, fresh on every lane.
+
+    ``parked=True`` raises every lane's ``exit_budget`` flag: a parked lane
+    is inert — the resume loop's condition fails before any work — which is
+    how vacant in-flight slots ride along in a dispatch at zero cost.
+    """
+    return TraverseCarry(
+        i=np.zeros(n, np.int32),
+        state=TopKState(
+            vals=np.zeros((n, k), np.int32),
+            ids=np.full((n, k), -1, np.int32),
+            postings=np.zeros(n, np.int32),
+            blocks=np.zeros(n, np.int32),
+        ),
+        exit_safe=np.zeros(n, bool),
+        exit_budget=np.full(n, parked, bool),
+    )
+
+
+def carry_done(carry: TraverseCarry, n_ranges: int) -> np.ndarray:
+    """Host-side completion mask: an exit flag fired, or the order is spent.
+
+    Matches ``device_traverse``'s exit condition exactly — a lane whose
+    flags are still False but whose cursor reached R exited "exhausted".
+    """
+    return (
+        np.asarray(carry.exit_safe)
+        | np.asarray(carry.exit_budget)
+        | (np.asarray(carry.i) >= n_ranges)
+    )
+
+
+def carry_result(carry: TraverseCarry) -> TraverseResult:
+    """View a (finished) carry as the equivalent ``TraverseResult``."""
+    return TraverseResult(
+        state=carry.state,
+        ranges_processed=carry.i,
+        exit_safe=carry.exit_safe,
+        exit_budget=carry.exit_budget,
+    )
+
+
+def _traverse_loop(
     dix: DeviceIndex,
-    blk_tab: jnp.ndarray,  # [R, B] int32, -1 padded — per-range block ids
-    rest_tab: jnp.ndarray,  # [R, B] int32
-    order: jnp.ndarray,  # [R] int32 — processing order of ranges
-    ordered_bounds: jnp.ndarray,  # [R] int32 — BoundSum of order[i] (0 if unused)
+    blk_tab: jnp.ndarray,  # [R, B]
+    rest_tab: jnp.ndarray,  # [R, B]
+    order: jnp.ndarray,  # [R]
+    ordered_bounds: jnp.ndarray,  # [R]
+    carry: TraverseCarry,
+    budget: jnp.ndarray,  # scalar int32
+    maxr: jnp.ndarray,  # scalar int32
     *,
     s_pad: int,
     k: int,
-    budget_postings: jnp.ndarray | int = 2**31 - 1,
-    max_ranges: jnp.ndarray | int = 2**31 - 1,
-    safe_stop: bool = True,
-    prune_blocks: bool = True,
-    impl: str = "xla",
-    interpret: bool = True,
-) -> TraverseResult:
-    """Whole-query traversal in a lax.while_loop (device-side anytime mode)."""
+    quantum: int | None,
+    safe_stop: bool,
+    prune_blocks: bool,
+    impl: str,
+    interpret: bool,
+) -> TraverseCarry:
+    """The one range-at-a-time while_loop both entry points share.
+
+    ``quantum=None`` runs to an exit condition (``device_traverse``);
+    ``quantum=Q`` additionally stops after Q loop iterations, returning the
+    carry mid-flight. The per-iteration arithmetic is identical either way,
+    which is what makes resumed traversals bitwise-equal to uninterrupted
+    ones: the same ``score_range_step`` calls happen against the same
+    states, only sliced across more dispatches. (The iteration that
+    discovers an exit condition scores nothing and leaves the cursor alone,
+    so resuming past a quantum boundary re-derives the same flags.)
+    """
     R = blk_tab.shape[0]
-    budget = jnp.asarray(budget_postings, jnp.int32)
-    maxr = jnp.asarray(max_ranges, jnp.int32)
 
-    def cond(carry):
-        i, state, stop_safe, stop_budget = carry
-        return (i < R) & ~stop_safe & ~stop_budget
+    def cond(c):
+        steps, i, state, stop_safe, stop_budget = c
+        live = (i < R) & ~stop_safe & ~stop_budget
+        if quantum is not None:
+            live = live & (steps < quantum)
+        return live
 
-    def body(carry):
-        i, state, stop_safe, stop_budget = carry
+    def body(c):
+        steps, i, state, stop_safe, stop_budget = c
         r = order[i]
         bound = ordered_bounds[i]
         th = theta(state)
@@ -249,14 +335,58 @@ def device_traverse(
             )
 
         state = jax.lax.cond(do, run, lambda st: st, state)
-        return (i + jnp.where(do, 1, 0), state, s_safe, s_budget)
+        return (steps + 1, i + jnp.where(do, 1, 0), state, s_safe, s_budget)
 
-    i0 = jnp.zeros((), jnp.int32)
-    carry = (i0, init_state(k), jnp.zeros((), bool), jnp.zeros((), bool))
-    i, state, s_safe, s_budget = jax.lax.while_loop(cond, body, carry)
-    return TraverseResult(
-        state=state, ranges_processed=i, exit_safe=s_safe, exit_budget=s_budget
+    c0 = (
+        jnp.zeros((), jnp.int32),
+        jnp.asarray(carry.i, jnp.int32),
+        carry.state,
+        jnp.asarray(carry.exit_safe, bool),
+        jnp.asarray(carry.exit_budget, bool),
     )
+    _, i, state, s_safe, s_budget = jax.lax.while_loop(cond, body, c0)
+    return TraverseCarry(i=i, state=state, exit_safe=s_safe, exit_budget=s_budget)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("s_pad", "k", "impl", "prune_blocks", "safe_stop", "interpret"),
+)
+def device_traverse(
+    dix: DeviceIndex,
+    blk_tab: jnp.ndarray,  # [R, B] int32, -1 padded — per-range block ids
+    rest_tab: jnp.ndarray,  # [R, B] int32
+    order: jnp.ndarray,  # [R] int32 — processing order of ranges
+    ordered_bounds: jnp.ndarray,  # [R] int32 — BoundSum of order[i] (0 if unused)
+    *,
+    s_pad: int,
+    k: int,
+    budget_postings: jnp.ndarray | int = 2**31 - 1,
+    max_ranges: jnp.ndarray | int = 2**31 - 1,
+    safe_stop: bool = True,
+    prune_blocks: bool = True,
+    impl: str = "xla",
+    interpret: bool = True,
+) -> TraverseResult:
+    """Whole-query traversal in a lax.while_loop (device-side anytime mode)."""
+    carry = _traverse_loop(
+        dix,
+        blk_tab,
+        rest_tab,
+        order,
+        ordered_bounds,
+        init_carry(k),
+        jnp.asarray(budget_postings, jnp.int32),
+        jnp.asarray(max_ranges, jnp.int32),
+        s_pad=s_pad,
+        k=k,
+        quantum=None,
+        safe_stop=safe_stop,
+        prune_blocks=prune_blocks,
+        impl=impl,
+        interpret=interpret,
+    )
+    return carry_result(carry)
 
 
 @functools.partial(
@@ -309,6 +439,68 @@ def batched_traverse(
 
     return jax.vmap(one)(
         blk_tabs, rest_tabs, orders, ordered_bounds, budgets, max_ranges
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "s_pad", "k", "quantum", "impl", "prune_blocks", "safe_stop", "interpret",
+    ),
+)
+def batched_traverse_resume(
+    dix: DeviceIndex,
+    blk_tabs: jnp.ndarray,  # [N, R, B] int32, -1 padded
+    rest_tabs: jnp.ndarray,  # [N, R, B] int32
+    orders: jnp.ndarray,  # [N, R] int32
+    ordered_bounds: jnp.ndarray,  # [N, R] int32
+    budgets: jnp.ndarray,  # [N] int32 — per-lane postings budgets
+    max_ranges: jnp.ndarray,  # [N] int32 — per-lane range budgets
+    carry: TraverseCarry,  # [N]-batched leaves
+    *,
+    s_pad: int,
+    k: int,
+    quantum: int,
+    safe_stop: bool = True,
+    prune_blocks: bool = True,
+    impl: str = "xla",
+    interpret: bool = True,
+) -> TraverseCarry:
+    """Resumable entry point: advance every lane at most ``quantum`` ranges.
+
+    The in-flight serving primitive (DESIGN.md §11). Each lane carries one
+    query's mid-flight ``TraverseCarry``; one dispatch steps all lanes by a
+    bounded number of while_loop iterations and returns the updated carries.
+    Lanes whose exit flags are already set (finished queries, parked slots)
+    fail the loop condition immediately and ride along untouched, so a
+    mixed batch of fresh, mid-flight, and vacant lanes costs one program.
+
+    Chaining dispatches until ``carry_done`` is bitwise-equivalent to one
+    ``device_traverse`` call per lane — same heap, counters, and exit flags
+    (tests/test_inflight.py pins this tier-1).
+    """
+
+    def one(bt, rt, o, ob, bud, mr, c):
+        return _traverse_loop(
+            dix,
+            bt,
+            rt,
+            o,
+            ob,
+            c,
+            jnp.asarray(bud, jnp.int32),
+            jnp.asarray(mr, jnp.int32),
+            s_pad=s_pad,
+            k=k,
+            quantum=quantum,
+            safe_stop=safe_stop,
+            prune_blocks=prune_blocks,
+            impl=impl,
+            interpret=interpret,
+        )
+
+    return jax.vmap(one)(
+        blk_tabs, rest_tabs, orders, ordered_bounds, budgets, max_ranges, carry
     )
 
 
@@ -467,7 +659,13 @@ class Engine:
             order = np.arange(R, dtype=np.int32)
         else:
             raise ValueError(f"unknown ordering {self.ordering!r}")
-        ordered_bounds = per_range_bound[order].astype(np.int32)
+        # The device tables are int32; a BoundSum past 2^31 must saturate,
+        # not wrap — a negative bound satisfies `bound <= theta` immediately
+        # and defeats safe termination. Saturation only errs conservative
+        # (the traversal keeps going). The host copy keeps true int64 mass
+        # for budget allocation (`query_shard_mass`).
+        bounds_host = per_range_bound[order].astype(np.int64)
+        ordered_bounds = np.clip(bounds_host, 0, 2**31 - 1).astype(np.int32)
 
         return QueryPlan(
             q_terms=q,
@@ -476,7 +674,7 @@ class Engine:
             order=jnp.asarray(order, jnp.int32),
             ordered_bounds=jnp.asarray(ordered_bounds, jnp.int32),
             order_host=order,
-            bounds_host=np.asarray(ordered_bounds, dtype=np.int64),
+            bounds_host=bounds_host,
         )
 
     # ------------------------------------------------------- execution modes

@@ -1,8 +1,17 @@
 # Batched anytime serving: shape-bucketed, vmapped device traversal with
-# per-query budgets, the SLA-governed micro-batching request loop, and the
-# range-sharded multi-device engine (DESIGN.md §3-§4).
+# per-query budgets, the SLA-governed micro-batching request loop, the
+# slot-swapping in-flight loop, and the range-sharded multi-device engine
+# (DESIGN.md §3-§4, §11).
 from repro.serving.batch_engine import BatchEngine, BatchResult, INT32_MAX  # noqa: F401
-from repro.serving.bucketing import BatchedPlan, BucketSpec, bucket_pow2, stack_plans  # noqa: F401
+from repro.serving.bucketing import (  # noqa: F401
+    BatchedPlan,
+    BucketSpec,
+    DoubleBuffer,
+    SlotTable,
+    bucket_pow2,
+    stack_plans,
+)
+from repro.serving.inflight import InflightServer  # noqa: F401
 from repro.serving.microbatch import (  # noqa: F401
     MicroBatchServer,
     ServedQuery,

@@ -31,7 +31,7 @@ from repro.serving.bucketing import (
     stack_plans,
 )
 
-__all__ = ["BatchResult", "BatchEngine", "INT32_MAX"]
+__all__ = ["BatchResult", "BatchEngine", "INT32_MAX", "lane_result"]
 
 INT32_MAX = 2**31 - 1
 
@@ -50,6 +50,34 @@ class BatchResult(NamedTuple):
     @property
     def exit_reason(self) -> str:
         return exit_reason(self.exit_safe, self.exit_budget)
+
+
+def lane_result(
+    vals: np.ndarray,
+    ids: np.ndarray,
+    postings: np.ndarray,
+    blocks: np.ndarray,
+    ranges: np.ndarray,
+    safe: np.ndarray,
+    budg: np.ndarray,
+    lane: int,
+) -> BatchResult:
+    """Unpack one lane of host-side batched traversal state.
+
+    Shared by the micro-batch chunk path and the in-flight slot loop so
+    both servers materialise byte-identical ``BatchResult``s from the same
+    lane state.
+    """
+    keep = ids[lane] >= 0
+    return BatchResult(
+        doc_ids=ids[lane][keep],
+        scores=vals[lane][keep],
+        ranges_processed=int(ranges[lane]),
+        postings=int(postings[lane]),
+        blocks=int(blocks[lane]),
+        exit_safe=bool(safe[lane]),
+        exit_budget=bool(budg[lane]),
+    )
 
 
 def _per_query(value, n: int, default: int) -> np.ndarray:
@@ -181,15 +209,8 @@ class BatchEngine:
         safe = np.asarray(res.exit_safe)
         budg = np.asarray(res.exit_budget)
         for lane, qi in enumerate(chunk_idx):
-            keep = ids[lane] >= 0
-            results[qi] = BatchResult(
-                doc_ids=ids[lane][keep],
-                scores=vals[lane][keep],
-                ranges_processed=int(ranges[lane]),
-                postings=int(postings[lane]),
-                blocks=int(blocks[lane]),
-                exit_safe=bool(safe[lane]),
-                exit_budget=bool(budg[lane]),
+            results[qi] = lane_result(
+                vals, ids, postings, blocks, ranges, safe, budg, lane
             )
 
     # ---------------------------------------------------------------- misc

@@ -54,12 +54,35 @@ class SlaBudgeter:
         cap = min(cap, float(2**31 - 1))  # inf SLA -> unbounded traversal
         return np.full(n, int(cap), dtype=np.int32)
 
-    def observe(self, elapsed_ms: float, total_postings: int, n: int) -> None:
-        """Feed back one served batch: throughput EWMA + Eq. (7) on alpha."""
+    def observe(
+        self,
+        elapsed_ms: float,
+        total_postings: int,
+        n: int,
+        latencies_ms: Sequence[float] | None = None,
+    ) -> None:
+        """Feed back one served batch: throughput EWMA + Eq. (7) on alpha.
+
+        ``elapsed_ms`` is *device* time for the dispatch — the right
+        denominator for the postings/ms rate EWMA. ``latencies_ms`` is the
+        per-query *end-to-end* latency (queue wait + planning + service);
+        Eq. (7) judges SLA compliance against it, so queueing-induced
+        misses tighten budgets too. Without it, device time stands in for
+        both (the pre-queue-aware behaviour).
+        """
         if elapsed_ms > 0 and n > 0:
             lane_rate = (total_postings / n) / elapsed_ms
             self.rate = (1 - self.ema) * self.rate + self.ema * max(lane_rate, 1e-6)
-        self.policy.on_query_end(elapsed_ms, self.sla_ms)
+        self._feed_policy(elapsed_ms, latencies_ms)
+
+    def _feed_policy(
+        self, elapsed_ms: float, latencies_ms: Sequence[float] | None
+    ) -> None:
+        if latencies_ms is None:
+            self.policy.on_query_end(elapsed_ms, self.sla_ms)
+        else:
+            for t_ms in latencies_ms:
+                self.policy.on_query_end(float(t_ms), self.sla_ms)
 
 
 @dataclasses.dataclass
@@ -135,6 +158,7 @@ class ShardedSlaBudgeter(SlaBudgeter):
         shard_postings: np.ndarray,
         n: int,
         active_mask: np.ndarray | None = None,
+        latencies_ms: Sequence[float] | None = None,
     ) -> None:
         """Per-shard throughput EWMAs + shared Eq. (7) feedback on alpha.
 
@@ -151,9 +175,15 @@ class ShardedSlaBudgeter(SlaBudgeter):
             if active_mask is not None:
                 new = np.where(np.asarray(active_mask, bool), new, self.rates)
             self.rates = new
-        self.policy.on_query_end(elapsed_ms, self.sla_ms)
+        self._feed_policy(elapsed_ms, latencies_ms)
 
-    def observe(self, elapsed_ms: float, total_postings: int, n: int) -> None:
+    def observe(
+        self,
+        elapsed_ms: float,
+        total_postings: int,
+        n: int,
+        latencies_ms: Sequence[float] | None = None,
+    ) -> None:
         """Base-interface feedback: only a total is known, so spread it
         evenly over the shards that could actually have done the work.
         Keeps adaptation live for callers driving the plain ``SlaBudgeter``
@@ -176,10 +206,12 @@ class ShardedSlaBudgeter(SlaBudgeter):
         n_active = int(active.sum())
         if n_active == 0:
             # Whole fleet down: nothing did the work, nothing to learn.
-            self.policy.on_query_end(elapsed_ms, self.sla_ms)
+            self._feed_policy(elapsed_ms, latencies_ms)
             return
         per_shard = np.where(active, total_postings / n_active, 0.0)
-        self.observe_sharded(elapsed_ms, per_shard, n, active_mask=active)
+        self.observe_sharded(
+            elapsed_ms, per_shard, n, active_mask=active, latencies_ms=latencies_ms
+        )
 
 
 @dataclasses.dataclass
@@ -188,6 +220,7 @@ class ServedQuery:
     result: BatchResult
     latency_ms: float  # queue wait + batch service time
     batch_size: int
+    quanta: int | None = None  # in-flight path: device quanta the query spanned
 
 
 class MicroBatchServer:
@@ -223,17 +256,28 @@ class MicroBatchServer:
         the health ledger's down mask here (DESIGN.md §9)."""
         return self.bengine.run_batch(plans, budget_postings=budgets)
 
-    def _observe(self, batch_ms: float, results) -> None:
+    def _observe(self, batch_ms: float, results, latencies_ms=None) -> None:
         """Feed one served batch back to the budgeter (override point:
-        the control plane adds its health mask and reshard planner here)."""
+        the control plane adds its health mask and reshard planner here).
+
+        ``batch_ms`` (device dispatch time) drives the throughput EWMA;
+        ``latencies_ms`` (per-query end-to-end, queue wait included) drives
+        Eq. (7) — so an overloaded queue tightens budgets even when each
+        individual dispatch comfortably makes the SLA.
+        """
         if hasattr(self.budgeter, "observe_sharded") and hasattr(
             results[0], "shard_postings"
         ):
             per_shard = np.sum([r.shard_postings for r in results], axis=0)
-            self.budgeter.observe_sharded(batch_ms, per_shard, len(results))
+            self.budgeter.observe_sharded(
+                batch_ms, per_shard, len(results), latencies_ms=latencies_ms
+            )
         else:
             self.budgeter.observe(
-                batch_ms, sum(r.postings for r in results), len(results)
+                batch_ms,
+                sum(r.postings for r in results),
+                len(results),
+                latencies_ms=latencies_ms,
             )
 
     def drain_once(self) -> list[ServedQuery]:
@@ -251,7 +295,8 @@ class MicroBatchServer:
         served_at = self.clock()
         batch_ms = (served_at - t0) * 1e3
 
-        self._observe(batch_ms, results)
+        latencies_ms = [(served_at - t_enq) * 1e3 for t_enq in enq]
+        self._observe(batch_ms, results, latencies_ms=latencies_ms)
         return [
             ServedQuery(
                 rid=rid,

@@ -9,6 +9,8 @@ every bucket shape the stream produces.
 
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -65,6 +67,42 @@ def test_bucket_pow2_ladder():
     assert spec.width_bucket(5) == 32
     assert spec.batch_bucket(9) == 16
     assert spec.batch_bucket(300) == 16
+
+
+def test_bucket_pow2_rejects_inconsistent_clamp():
+    with pytest.raises(ValueError):
+        bucket_pow2(10, lo=8, hi=4)  # hi < lo: no consistent bucket exists
+    with pytest.raises(ValueError):
+        bucket_pow2(10, lo=0)
+    # Boundary: hi == lo is a degenerate but consistent single-bucket ladder.
+    assert bucket_pow2(100, lo=16, hi=16) == 16
+    with pytest.raises(ValueError):
+        BucketSpec(min_width=0)
+    with pytest.raises(ValueError):
+        BucketSpec(min_batch=8, max_batch=4)
+
+
+def test_stack_plans_saturates_int64_bounds():
+    """A BoundSum past 2^31 must saturate, not wrap negative: a wrapped
+    bound satisfies ``bound <= theta`` immediately and silently disables
+    safe termination for that range."""
+    eng, queries = _small_setup(seed=1, n_ranges=4)
+    plan = eng.plan(queries[0])
+    huge = plan.bounds_host.astype(np.int64).copy()
+    huge[0] = 2**31 + 12345  # would wrap to a negative int32
+    big_plan = dataclasses.replace(plan, bounds_host=huge)
+    with pytest.warns(RuntimeWarning, match="saturating"):
+        bp = stack_plans([big_plan], width=plan.blk_tab.shape[1], batch=1)
+    got = np.asarray(bp.ordered_bounds)[0]
+    assert got[0] == 2**31 - 1  # saturated, positive
+    assert np.all(got >= 0)
+    assert got[1:].tolist() == huge[1:].astype(np.int64).tolist()
+
+    neg_plan = dataclasses.replace(
+        plan, bounds_host=np.where(np.arange(len(huge)) == 0, -5, huge)
+    )
+    with pytest.raises(ValueError, match="negative"):
+        stack_plans([neg_plan], width=plan.blk_tab.shape[1], batch=1)
 
 
 def test_stack_plans_pads_with_inert_dummies():

@@ -1,0 +1,421 @@
+"""In-flight (slot-swapping) serving loop: bitwise-resume + saturation.
+
+The tentpole invariant, pinned tier-1: a query served across N slot quanta
+via ``batched_traverse_resume`` — including full host<->device carry
+round-trips between quanta, mid-flight slot swaps, and budget exits — is
+*bitwise identical* to the same query served by one ``device_traverse``
+call: same doc ids, scores, work counters, and exit reason.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.clustered_index import build_index
+from repro.core.range_daat import (
+    Engine,
+    TraverseCarry,
+    batched_init_carry,
+    batched_traverse_resume,
+    carry_done,
+)
+from repro.data.synth import make_corpus, make_query_log
+from repro.serving import (
+    BatchEngine,
+    BucketSpec,
+    DoubleBuffer,
+    InflightServer,
+    MicroBatchServer,
+    SlaBudgeter,
+    SlotTable,
+    stack_plans,
+)
+
+INT32_MAX = 2**31 - 1
+
+
+def _small_setup(seed: int, n_ranges: int, k: int = 5, n_queries: int = 12):
+    corpus = make_corpus(
+        n_docs=900, n_terms=700, n_topics=4, mean_doc_len=50, seed=seed
+    )
+    idx = build_index(corpus, n_ranges=n_ranges, strategy="clustered")
+    eng = Engine(idx, k=k)
+    log = make_query_log(corpus, n_queries=n_queries, seed=seed + 1)
+    return eng, [log.terms[i] for i in range(log.n_queries)]
+
+
+def _to_device(carry):
+    return jax.tree_util.tree_map(jnp.asarray, carry)
+
+
+def _to_host(carry):
+    return jax.tree_util.tree_map(lambda x: np.array(x), carry)
+
+
+def _assert_result_matches_single(eng, plan, result, **traverse_kw):
+    single = eng.traverse(plan, **traverse_kw)
+    sids, svals = eng.topk_docs(single.state)
+    assert result.doc_ids.tolist() == sids.tolist()
+    assert result.scores.tolist() == svals.tolist()
+    assert result.exit_safe == bool(single.exit_safe)
+    assert result.exit_budget == bool(single.exit_budget)
+    assert result.ranges_processed == int(single.ranges_processed)
+    assert result.postings == int(np.asarray(single.state.postings))
+    assert result.blocks == int(np.asarray(single.state.blocks))
+
+
+class FixedBudgeter(SlaBudgeter):
+    """Deterministic budgets: every admission gets the same postings cap."""
+
+    def __init__(self, cap: int = INT32_MAX):
+        super().__init__(sla_ms=float("inf"))
+        self.cap = cap
+        self.given: list[int] = []
+
+    def budgets(self, n, plans=None):
+        self.given.extend([self.cap] * n)
+        return np.full(n, self.cap, dtype=np.int32)
+
+
+class FakeClock:
+    """Deterministic clock: every reading advances time by ``dt`` seconds."""
+
+    def __init__(self, dt: float):
+        self.t = 0.0
+        self.dt = dt
+
+    def __call__(self) -> float:
+        self.t += self.dt
+        return self.t
+
+
+# ----------------------------------------------------- core resume invariant
+
+
+@pytest.mark.parametrize("quantum", [1, 2, 3])
+def test_quantum_stepped_resume_matches_single_traverse(quantum):
+    """N-quanta resume (host round-trip each step) == one device_traverse."""
+    eng, queries = _small_setup(seed=0, n_ranges=6, n_queries=8)
+    plans = [eng.plan(q) for q in queries]
+    R = eng.index.n_ranges
+    width = max(p.blk_tab.shape[1] for p in plans)
+    bp = stack_plans(plans, width, batch=len(plans))
+
+    rng = np.random.default_rng(3)
+    budgets = rng.choice([120, 700, INT32_MAX], size=len(plans)).astype(np.int64)
+    maxr = rng.choice([1, 3, INT32_MAX], size=len(plans)).astype(np.int64)
+
+    carry = batched_init_carry(len(plans), eng.k)
+    for _ in range(200):
+        out = batched_traverse_resume(
+            eng.dix, bp.blk_tab, bp.rest_tab, bp.order, bp.ordered_bounds,
+            jnp.asarray(np.clip(budgets, 0, INT32_MAX).astype(np.int32)),
+            jnp.asarray(np.clip(maxr, 0, INT32_MAX).astype(np.int32)),
+            _to_device(carry), s_pad=eng.s_pad, k=eng.k, quantum=quantum,
+        )
+        carry = _to_host(out)
+        if carry_done(carry, R).all():
+            break
+    assert carry_done(carry, R).all()
+
+    for i, p in enumerate(plans):
+        single = eng.traverse(
+            p, budget_postings=int(budgets[i]), max_ranges=int(maxr[i])
+        )
+        assert carry.state.vals[i].tolist() == np.asarray(single.state.vals).tolist()
+        assert carry.state.ids[i].tolist() == np.asarray(single.state.ids).tolist()
+        assert int(carry.i[i]) == int(single.ranges_processed)
+        assert bool(carry.exit_safe[i]) == bool(single.exit_safe)
+        assert bool(carry.exit_budget[i]) == bool(single.exit_budget)
+        assert int(carry.state.postings[i]) == int(np.asarray(single.state.postings))
+        assert int(carry.state.blocks[i]) == int(np.asarray(single.state.blocks))
+
+
+def test_carry_roundtrip_is_bitwise():
+    """host->device->host round-trip preserves every carry leaf exactly."""
+    eng, queries = _small_setup(seed=2, n_ranges=4, n_queries=4)
+    plans = [eng.plan(q) for q in queries]
+    width = max(p.blk_tab.shape[1] for p in plans)
+    bp = stack_plans(plans, width, batch=len(plans))
+    b = jnp.full(len(plans), INT32_MAX, jnp.int32)
+
+    carry = batched_init_carry(len(plans), eng.k)
+    out = batched_traverse_resume(
+        eng.dix, bp.blk_tab, bp.rest_tab, bp.order, bp.ordered_bounds,
+        b, b, _to_device(carry), s_pad=eng.s_pad, k=eng.k, quantum=2,
+    )
+    host = _to_host(out)
+    back = _to_host(_to_device(host))
+    for leaf_a, leaf_b in zip(
+        jax.tree_util.tree_leaves(host), jax.tree_util.tree_leaves(back)
+    ):
+        assert leaf_a.dtype == leaf_b.dtype
+        assert np.array_equal(leaf_a, leaf_b)
+
+
+def test_parked_lanes_do_no_work():
+    """A parked (vacant) lane's carry is inert across any number of quanta."""
+    eng, queries = _small_setup(seed=4, n_ranges=4, n_queries=4)
+    plans = [eng.plan(q) for q in queries]
+    width = max(p.blk_tab.shape[1] for p in plans)
+    bp = stack_plans(plans[:2], width, batch=4)  # lanes 2,3 are dummies
+    b = jnp.full(4, INT32_MAX, jnp.int32)
+
+    carry = batched_init_carry(4, eng.k, parked=True)
+    # Un-park only the two real lanes.
+    carry.exit_budget[:2] = False
+    for _ in range(10):
+        carry = _to_host(batched_traverse_resume(
+            eng.dix, bp.blk_tab, bp.rest_tab, bp.order, bp.ordered_bounds,
+            b, b, _to_device(carry), s_pad=eng.s_pad, k=eng.k, quantum=1,
+        ))
+    for lane in (2, 3):
+        assert int(carry.i[lane]) == 0
+        assert int(carry.state.postings[lane]) == 0
+        assert np.all(carry.state.ids[lane] == -1)
+
+
+# --------------------------------------------------------- slot-table staging
+
+
+def test_slot_table_write_clear_grow():
+    eng, queries = _small_setup(seed=6, n_ranges=4, n_queries=3)
+    plans = [eng.plan(q) for q in queries]
+    R = eng.index.n_ranges
+    w = max(p.blk_tab.shape[1] for p in plans)
+    tab = SlotTable(3, R, w)
+    tab.write_lane(0, plans[0], budget=500)
+    assert tab.valid[0] and tab.budget[0] == 500
+    assert np.array_equal(tab.order[0], plans[0].order_host)
+    tab.clear_lane(0)
+    assert not tab.valid[0] and tab.budget[0] == 0
+    assert np.all(tab.blk[0] == -1) and np.all(tab.bounds[0] == 0)
+
+    tab.write_lane(1, plans[1], budget=7, max_ranges=2)
+    grown = tab.grow_width(2 * w)
+    assert grown.width == 2 * w
+    assert np.array_equal(grown.blk[1, :, :w], tab.blk[1])
+    assert np.all(grown.blk[1, :, w:] == -1)  # new columns are padding
+    assert grown.budget[1] == 7 and grown.maxr[1] == 2 and grown.valid[1]
+
+    with pytest.raises(ValueError):
+        tab.grow_width(w // 2)
+    with pytest.raises(ValueError):
+        SlotTable(0, R, w)
+
+
+def test_double_buffer_swap_carries_live_state():
+    eng, queries = _small_setup(seed=6, n_ranges=4, n_queries=2)
+    plan = eng.plan(queries[0])
+    w = plan.blk_tab.shape[1]
+    buf = DoubleBuffer(2, eng.index.n_ranges, w)
+    buf.back.write_lane(0, plan, budget=123)
+    buf.swap()
+    # The admission went live, and the new back mirrors the front.
+    assert buf.front.valid[0] and buf.front.budget[0] == 123
+    assert buf.back.valid[0] and buf.back.budget[0] == 123
+    buf.back.clear_lane(0)
+    assert buf.front.valid[0]  # in-flight table untouched by back writes
+    buf.swap()
+    assert not buf.front.valid[0]
+
+
+# ------------------------------------------------------------ server parity
+
+
+def test_inflight_server_bitwise_parity_unbounded():
+    eng, queries = _small_setup(seed=8, n_ranges=4, n_queries=12)
+    beng = BatchEngine(eng, BucketSpec(max_batch=8))
+    srv = InflightServer(beng, SlaBudgeter(sla_ms=float("inf")), n_slots=4)
+    served = srv.replay(queries)
+    assert sorted(s.rid for s in served) == list(range(len(queries)))
+    for s in served:
+        _assert_result_matches_single(eng, eng.plan(queries[s.rid]), s.result)
+
+
+def test_inflight_server_bitwise_parity_budgeted():
+    """Admission-time budgets behave exactly like device_traverse budgets."""
+    eng, queries = _small_setup(seed=9, n_ranges=6, n_queries=10)
+    beng = BatchEngine(eng, BucketSpec(max_batch=8))
+    budgeter = FixedBudgeter(cap=100)
+    srv = InflightServer(beng, budgeter, n_slots=4, quantum=2)
+    served = srv.replay(queries)
+    assert len(budgeter.given) == len(queries)
+    for s in served:
+        _assert_result_matches_single(
+            eng, eng.plan(queries[s.rid]), s.result, budget_postings=100
+        )
+    assert any(s.result.exit_reason == "budget" for s in served)
+
+
+def test_slot_swap_happens_mid_flight():
+    """Queries admit into freed slots while others are still in flight."""
+    eng, queries = _small_setup(seed=10, n_ranges=6, n_queries=10)
+    beng = BatchEngine(eng, BucketSpec(max_batch=4))
+    srv = InflightServer(beng, SlaBudgeter(sla_ms=float("inf")), n_slots=2)
+    for q in queries:
+        srv.submit(q)
+    swapped = False
+    served = []
+    while srv.pending or srv.active:
+        done = srv.step()
+        if done and srv.active > 0:
+            swapped = True  # a slot retired while its batchmate kept flying
+        served.extend(done)
+    assert swapped
+    assert srv.admissions == len(queries) > srv.n_slots
+    # One persistent program: slot swaps never recompile.
+    assert len(srv.compiled_shapes) == 1
+    for s in served:
+        _assert_result_matches_single(eng, eng.plan(queries[s.rid]), s.result)
+
+
+# --------------------------------------------------------------- saturation
+
+
+def test_saturation_bitwise_both_servers():
+    """Offered load >> capacity: every query's result stays bitwise-exact."""
+    eng, queries = _small_setup(seed=12, n_ranges=4, n_queries=24)
+    cap = 600
+
+    beng = BatchEngine(eng, BucketSpec(max_batch=4))
+    micro = MicroBatchServer(beng, FixedBudgeter(cap=cap), max_batch=4)
+    for q in queries:  # burst far beyond one batch
+        micro.submit(q)
+    served_m = []
+    while micro.pending:
+        served_m.extend(micro.drain_once())
+
+    infl = InflightServer(
+        BatchEngine(eng, BucketSpec(max_batch=4)), FixedBudgeter(cap=cap),
+        n_slots=4,
+    )
+    served_i = infl.replay(queries)
+
+    for served in (served_m, served_i):
+        assert sorted(s.rid for s in served) == list(range(len(queries)))
+        for s in served:
+            _assert_result_matches_single(
+                eng, eng.plan(queries[s.rid]), s.result, budget_postings=cap
+            )
+
+
+def test_saturation_queue_bounded_under_tightening():
+    """Sustained arrivals: the budgeter tightens and the queue stays bounded."""
+    eng, queries = _small_setup(seed=14, n_ranges=4, n_queries=12)
+    beng = BatchEngine(eng, BucketSpec(max_batch=8))
+    clock = FakeClock(dt=0.010)  # every reading +10ms: e2e latencies blow up
+    budgeter = SlaBudgeter(sla_ms=5.0, rate=100.0)
+    srv = MicroBatchServer(beng, budgeter, max_batch=8, clock=clock)
+
+    depths = []
+    qi = 0
+    for _ in range(12):  # arrivals every round, service every round
+        for _ in range(4):
+            srv.submit(queries[qi % len(queries)])
+            qi += 1
+        srv.drain_once()
+        depths.append(srv.pending)
+    # Service rate (8/round) beats arrivals (4/round): depth bounded, and
+    # the overload drove Eq. (7) to tighten rather than relax.
+    assert max(depths) <= 8
+    assert depths[-1] == 0
+    assert budgeter.policy.alpha > 1.0
+
+    infl = InflightServer(
+        BatchEngine(eng, BucketSpec(max_batch=8)),
+        SlaBudgeter(sla_ms=5.0, rate=100.0), n_slots=8,
+        clock=FakeClock(dt=0.010),
+    )
+    depths = []
+    qi = 0
+    for _ in range(16):
+        for _ in range(4):
+            infl.submit(queries[qi % len(queries)])
+            qi += 1
+        infl.step()
+        depths.append(infl.pending + infl.active)
+    infl.run_until_idle()
+    assert max(depths) <= 8 + 4 * 16  # never exceeds total offered
+    assert infl.budgeter.policy.alpha > 1.0
+    assert infl.pending == 0 and infl.active == 0
+
+
+def test_latency_attribution_monotone_with_queue_position():
+    """Identical queries arriving at one instant, FIFO service: attributed
+    latency is non-decreasing with queue position (both servers)."""
+    eng, queries = _small_setup(seed=16, n_ranges=4, n_queries=2)
+    q = queries[0]
+
+    beng = BatchEngine(eng, BucketSpec(max_batch=4))
+    clock = FakeClock(dt=0.0)  # frozen during the arrival burst
+    micro = MicroBatchServer(
+        beng, SlaBudgeter(sla_ms=float("inf")), max_batch=4, clock=clock
+    )
+    for _ in range(12):
+        micro.submit(q)
+    clock.dt = 0.001  # time moves once service starts
+    served = []
+    while micro.pending:
+        served.extend(micro.drain_once())
+    lat = [s.latency_ms for s in sorted(served, key=lambda s: s.rid)]
+    assert all(b >= a for a, b in zip(lat, lat[1:])), lat
+    assert lat[-1] > lat[0]  # deeper queue position paid real queue wait
+
+    clock = FakeClock(dt=0.0)
+    infl = InflightServer(
+        BatchEngine(eng, BucketSpec(max_batch=4)),
+        SlaBudgeter(sla_ms=float("inf")), n_slots=4, clock=clock,
+    )
+    for _ in range(12):
+        infl.submit(q)
+    clock.dt = 0.001
+    served = infl.run_until_idle()
+    lat = [s.latency_ms for s in sorted(served, key=lambda s: s.rid)]
+    assert all(b >= a for a, b in zip(lat, lat[1:])), lat
+    assert lat[-1] > lat[0]
+
+
+# ------------------------------------------- queue-aware Reactive feedback
+
+
+def test_microbatch_overload_feeds_end_to_end_latency_to_policy():
+    """Queue wait counts: device-fast batches behind a deep queue must
+    still register as SLA misses and tighten budgets (Eq. 7)."""
+    eng, queries = _small_setup(seed=18, n_ranges=4, n_queries=12)
+    beng = BatchEngine(eng, BucketSpec(max_batch=2))
+    clock = FakeClock(dt=0.010)
+    # Each dispatch reads the clock twice -> batch_ms == 10 < sla == 50.
+    # But a 12-deep queue drained 2 at a time means most queries wait far
+    # longer than 50ms end-to-end.
+    budgeter = SlaBudgeter(sla_ms=50.0, rate=1e6)
+    srv = MicroBatchServer(beng, budgeter, max_batch=2, clock=clock)
+    for q in queries:
+        srv.submit(q)
+    served = []
+    while srv.pending:
+        served.extend(srv.drain_once())
+
+    assert all(s.latency_ms > 10.0 for s in served[2:])
+    assert any(s.latency_ms > 50.0 for s in served)
+    # Pre-fix behaviour: policy only ever saw batch_ms=10 (< sla) and alpha
+    # would *relax* below 1. Queue-aware feedback must tighten it instead.
+    assert budgeter.policy.alpha > 1.0
+
+
+def test_budgeter_latencies_override_device_time():
+    fast_device = SlaBudgeter(sla_ms=50.0)
+    fast_device.observe(
+        elapsed_ms=10.0, total_postings=1000, n=2, latencies_ms=[120.0, 130.0]
+    )
+    assert fast_device.policy.alpha > 1.0  # two e2e misses despite fast device
+
+    rate_only = SlaBudgeter(sla_ms=50.0)
+    a0 = rate_only.policy.alpha
+    rate_only.observe(
+        elapsed_ms=10.0, total_postings=1000, n=2, latencies_ms=[]
+    )
+    assert rate_only.policy.alpha == a0  # empty list: rate EWMA only
