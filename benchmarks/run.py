@@ -37,6 +37,7 @@ MODULES = [
     ("S6_inflight", "benchmarks.bench_inflight"),
     ("T8_failures", "benchmarks.bench_failures"),
     ("Q_quantization", "benchmarks.bench_quantization"),
+    ("S7_packed", "benchmarks.bench_packed_postings"),
 ]
 
 
@@ -142,6 +143,14 @@ def _headline(name: str, rows) -> tuple[float, str]:
                 1e6 / max(r["qps"], 1e-9),
                 f"qps={r['qps']}_vs_micro={r['qps_vs_microbatch']}x"
                 f"_p99={r['p99_vs_microbatch']}x",
+            )
+        if name == "S7_packed":
+            pk = next(x for x in rows if x["docs_format"] == "packed")
+            return (
+                1e6 / max(pk["qps"], 1e-9),
+                f"docid_hbm_ratio={pk['docid_hbm_ratio_vs_int32']}x"
+                f"_qps_vs_int32={pk['qps_vs_int32']}x"
+                f"_parity={pk['parity_bitwise']}",
             )
         if name == "Q_quantization":
             r8 = next(x for x in rows if x["bits"] == 8)

@@ -31,16 +31,35 @@ from repro.data.synth import Corpus
 
 BLOCK = 128
 
+# Legal per-block packed widths (bits per docid delta). Every width divides
+# 32, so no delta ever straddles a uint32 word (lane j occupies bits
+# [j*w, (j+1)*w) of the block's word run and j*w % 32 + w <= 32 for every w
+# here); 24 is excluded exactly because lane 1 would straddle a word
+# boundary. The tuple doubles as the width-code table: the device directory
+# stores ``index(PACK_WIDTHS, w)`` in the top bits of each entry.
+PACK_WIDTHS = (0, 4, 8, 16, 32)
+
+# Device directory entry layout (DESIGN.md §12): bits [0, PACK_DIR_BITS)
+# hold the block's word offset, bits above hold its PACK_WIDTHS code. Caps
+# the packed stream at 2^27 words = 512 MiB per engine/shard upload.
+PACK_DIR_BITS = 27
+
 __all__ = [
     "BLOCK",
+    "PACK_DIR_BITS",
+    "PACK_WIDTHS",
     "ClusteredIndex",
     "IndexDelta",
     "IndexShard",
+    "PackedPostings",
     "apply_delta",
     "balance_range_shards",
     "build_index",
     "build_index_cached",
     "device_bytes_report",
+    "pack_dir_entries",
+    "pack_docs",
+    "unpack_docs",
     "extend_index",
     "extended_arrangement",
     "plan_delta",
@@ -58,6 +77,8 @@ def device_bytes_report(
     n_terms: int,
     n_ranges: int,
     impact_dtype: str = "int32",
+    docs_format: str = "int32",
+    n_pack_words: int = 0,
 ) -> dict[str, int]:
     """HBM bytes of a ``DeviceIndex`` upload from index dimensions alone.
 
@@ -65,12 +86,24 @@ def device_bytes_report(
     here (``ClusteredIndex.device_bytes``), and artifact tooling computes
     the same report straight from manifest metadata without loading any
     array (``python -m repro.index_io inspect``).
+
+    With ``docs_format="packed"`` the ``docs`` entry covers the bit-packed
+    delta word stream plus its per-block (word_start, width, first_doc)
+    directory (DESIGN.md §12) — the int32 docid array is not uploaded.
     """
     if impact_dtype not in ("int32", "int8"):
         raise ValueError(f"impact_dtype {impact_dtype!r} not in ('int32', 'int8')")
+    if docs_format not in ("int32", "packed"):
+        raise ValueError(f"docs_format {docs_format!r} not in ('int32', 'packed')")
     imp_itemsize = 1 if impact_dtype == "int8" else 4
+    if docs_format == "packed":
+        # Word stream + the two int32 directory columns the engine uploads:
+        # (word_start | width_code << PACK_DIR_BITS) and the first docid.
+        docs_bytes = n_pack_words * 4 + 2 * n_blocks * 4
+    else:
+        docs_bytes = nnz * 4
     out = {
-        "docs": nnz * 4,
+        "docs": docs_bytes,
         "impacts": nnz * imp_itemsize,
         "blk_start": n_blocks * 4,
         "blk_len": n_blocks * 4,
@@ -81,6 +114,168 @@ def device_bytes_report(
     }
     out["postings"] = out["docs"] + out["impacts"]
     out["total"] = sum(v for k, v in out.items() if k != "postings")
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedPostings:
+    """Per-block fixed-width bit-packed docid deltas (DESIGN.md §12).
+
+    Block ``b`` stores its ``blk_len[b]`` docid deltas (``delta_0 = 0``
+    explicitly, so lane ``j`` always reads bits ``[j*w, (j+1)*w)`` of the
+    block's word run) at ``blk_width[b]`` bits each, starting at word
+    ``blk_word_start[b]`` of the shared uint32 ``words`` stream; the
+    absolute first docid lives out-of-band in ``blk_first``. Widths come
+    from ``PACK_WIDTHS`` — the smallest that covers the block's max delta —
+    so constant runs cost zero stream words.
+    """
+
+    words: np.ndarray  # [n_words] uint32 — packed delta stream
+    blk_word_start: np.ndarray  # [NB] int64 — word offset per block
+    blk_width: np.ndarray  # [NB] int32 — bits per delta (PACK_WIDTHS)
+    blk_first: np.ndarray  # [NB] int32 — absolute first docid (0 if empty)
+    n_postings: int
+
+    @property
+    def n_words(self) -> int:
+        return int(self.words.shape[0])
+
+    @property
+    def n_blocks(self) -> int:
+        return int(self.blk_word_start.shape[0])
+
+    def device_nbytes(self) -> int:
+        """Bytes of the device upload: word stream + merged int32 directory
+        (:func:`pack_dir_entries`) + first-docid column."""
+        return self.n_words * 4 + 2 * self.n_blocks * 4
+
+
+def _segment_arange(lens: np.ndarray) -> np.ndarray:
+    """[0..l0), [0..l1), ... as one flat int64 array."""
+    lens = np.asarray(lens, np.int64)
+    total = int(lens.sum())
+    ends = np.cumsum(lens)
+    return np.arange(total, dtype=np.int64) - np.repeat(ends - lens, lens)
+
+
+def pack_docs(
+    docs: np.ndarray, blk_start: np.ndarray, blk_len: np.ndarray
+) -> PackedPostings:
+    """Bit-pack per-block docid deltas into a uint32 word stream.
+
+    Width selection: the smallest of ``PACK_WIDTHS`` covering the block's
+    max delta (0 for constant runs — including every single-posting block).
+    Words per block: ``ceil(len * width / 32)``. Docids must be
+    non-negative and non-decreasing within each block; raises
+    ``ValueError`` otherwise.
+    """
+    docs = np.asarray(docs)
+    blk_start = np.asarray(blk_start, np.int64)
+    blk_len = np.asarray(blk_len, np.int64)
+    nb = int(blk_start.shape[0])
+    if nb and int(blk_len.max(initial=0)) > BLOCK:
+        raise ValueError(f"block length exceeds BLOCK={BLOCK}")
+    lane = _segment_arange(blk_len)
+    seg = np.repeat(np.arange(nb, dtype=np.int64), blk_len)
+    vals = docs[blk_start[seg] + lane].astype(np.int64)
+    total = int(vals.shape[0])
+    if total and int(vals.min()) < 0:
+        raise ValueError("docids must be non-negative")
+    # Deltas with delta_0 := 0 at each block head.
+    prev = np.empty_like(vals)
+    if total:
+        prev[1:] = vals[:-1]
+    heads = lane == 0
+    prev[heads] = vals[heads]
+    delta = vals - prev
+    if total and int(delta.min()) < 0:
+        raise ValueError("docids must be non-decreasing within a block")
+    maxd = np.zeros(nb, np.int64)
+    np.maximum.at(maxd, seg, delta)
+    width = np.select(
+        [maxd < (1 << w) for w in PACK_WIDTHS[:-1]],
+        list(PACK_WIDTHS[:-1]),
+        default=PACK_WIDTHS[-1],
+    ).astype(np.int32)
+    firsts = np.zeros(nb, np.int32)
+    nz = blk_len > 0
+    seg_head = np.cumsum(blk_len) - blk_len
+    firsts[nz] = vals[seg_head[nz]].astype(np.int32)
+    wpb = (blk_len * width.astype(np.int64) + 31) // 32
+    word_start = np.cumsum(wpb) - wpb
+    n_words = int(wpb.sum())
+    words = np.zeros(n_words, np.uint32)
+    w_post = width.astype(np.int64)[seg]
+    packed_lanes = w_post > 0
+    bit = lane[packed_lanes] * w_post[packed_lanes]
+    word_idx = word_start[seg[packed_lanes]] + bit // 32
+    # Byte-aligned widths: shift + width <= 32, each delta lands in one word.
+    contrib = delta[packed_lanes].astype(np.uint64) << (bit % 32).astype(np.uint64)
+    np.bitwise_or.at(words, word_idx, contrib.astype(np.uint32))
+    return PackedPostings(
+        words=words,
+        blk_word_start=word_start,
+        blk_width=width,
+        blk_first=firsts,
+        n_postings=total,
+    )
+
+
+def pack_dir_entries(packed: PackedPostings) -> np.ndarray:
+    """Merge (word_start, width) into one int32 directory column.
+
+    Entry layout: ``word_start | PACK_WIDTHS.index(width) << PACK_DIR_BITS``.
+    Folding the 3-bit width code into the word offset's headroom is what
+    takes the per-block directory from three uploaded columns to two —
+    without it the directory overhead on short blocks eats most of the
+    packing win (DESIGN.md §12).
+    """
+    if packed.n_words >= (1 << PACK_DIR_BITS):
+        raise ValueError(
+            f"packed stream has {packed.n_words} words >= 2^{PACK_DIR_BITS}; "
+            f"shard the index before packing"
+        )
+    codes = np.searchsorted(np.asarray(PACK_WIDTHS), packed.blk_width)
+    return (
+        packed.blk_word_start.astype(np.int64) | (codes << PACK_DIR_BITS)
+    ).astype(np.int32)
+
+
+def unpack_docs(
+    packed: PackedPostings, blk_start: np.ndarray, blk_len: np.ndarray
+) -> np.ndarray:
+    """Exact inverse of :func:`pack_docs`: rebuild the int32 docid array.
+
+    Each block's deltas are masked out of the word stream and
+    prefix-summed from ``blk_first``; results scatter back to
+    ``blk_start[b] + lane``. ``unpack_docs(pack_docs(x, s, l), s, l) == x``
+    bitwise for any valid block geometry.
+    """
+    blk_start = np.asarray(blk_start, np.int64)
+    blk_len = np.asarray(blk_len, np.int64)
+    nb = int(blk_start.shape[0])
+    lane = _segment_arange(blk_len)
+    seg = np.repeat(np.arange(nb, dtype=np.int64), blk_len)
+    total = int(lane.shape[0])
+    w = packed.blk_width.astype(np.int64)[seg]
+    delta = np.zeros(total, np.int64)
+    nzl = w > 0
+    bit = lane[nzl] * w[nzl]
+    word = packed.words[packed.blk_word_start[seg[nzl]] + bit // 32]
+    mask = (np.int64(1) << w[nzl]) - 1
+    delta[nzl] = (
+        word.astype(np.uint64) >> (bit % 32).astype(np.uint64)
+    ).astype(np.int64) & mask
+    cs = np.cumsum(delta)
+    seg_head = np.cumsum(blk_len) - blk_len
+    base = np.zeros(nb, np.int64)
+    nz = blk_len > 0
+    # cumsum *before* each head (head's own delta is 0 by construction).
+    base[nz] = cs[seg_head[nz]] - delta[seg_head[nz]]
+    vals = packed.blk_first.astype(np.int64)[seg] + cs - base[seg]
+    n_out = int((blk_start + blk_len).max(initial=0))
+    out = np.zeros(n_out, np.int32)
+    out[blk_start[seg] + lane] = vals.astype(np.int32)
     return out
 
 
@@ -148,24 +343,48 @@ class ClusteredIndex:
         return int(self.arrangement.range_sizes.max())
 
     # ---------------------------------------------------------------- space
-    def device_bytes(self, impact_dtype: str = "int32") -> dict[str, int]:
+    def packed_postings(self) -> PackedPostings:
+        """Bit-packed docid deltas for this index's block geometry (cached).
+
+        Built indexes are never mutated in place (same contract the
+        fingerprint cache relies on), so the packed mirror is computed once
+        per index object and shared by every Engine upload / space report.
+        """
+        cached = self.__dict__.get("_packed_cache")
+        if cached is None:
+            cached = pack_docs(self.docs, self.blk_start, self.blk_len)
+            self.__dict__["_packed_cache"] = cached
+        return cached
+
+    def device_bytes(
+        self, impact_dtype: str = "int32", docs_format: str = "int32"
+    ) -> dict[str, int]:
         """Actual HBM bytes per device array at the chosen impact dtype.
 
         Mirrors exactly what ``range_daat.Engine`` uploads as its
         ``DeviceIndex`` — one entry per device array (all int32 except
         ``impacts``, which is 1 B/posting under ``impact_dtype="int8"``,
         DESIGN.md §8) plus ``postings`` (docs + impacts) and ``total``
-        aggregates. Tests assert these equal the uploaded buffers' nbytes.
+        aggregates; under ``docs_format="packed"`` the ``docs`` entry is
+        the packed word stream + directory (DESIGN.md §12). Tests assert
+        these equal the uploaded buffers' nbytes.
         """
+        n_pack_words = (
+            self.packed_postings().n_words if docs_format == "packed" else 0
+        )
         return device_bytes_report(
             nnz=self.nnz,
             n_blocks=self.n_blocks,
             n_terms=self.n_terms,
             n_ranges=self.n_ranges,
             impact_dtype=impact_dtype,
+            docs_format=docs_format,
+            n_pack_words=n_pack_words,
         )
 
-    def space_report(self, impact_dtype: str = "int32") -> dict:
+    def space_report(
+        self, impact_dtype: str = "int32", docs_format: str = "int32"
+    ) -> dict:
         """Logical space accounting in GiB at paper-matched widths (T2).
 
         docids at 4 B, impacts at ceil(bits/8) B, block metadata, the sparse
@@ -190,7 +409,7 @@ class ClusteredIndex:
             "cluster_map_gib": cluster_map * gib,
             "total_gib": (postings + blocks + rangewise + listwise + cluster_map)
             * gib,
-            "device_bytes": self.device_bytes(impact_dtype),
+            "device_bytes": self.device_bytes(impact_dtype, docs_format),
         }
 
     # ------------------------------------------------------------- queries

@@ -25,10 +25,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bound_sum
-from repro.core.clustered_index import BLOCK, ClusteredIndex
+from repro.core.clustered_index import BLOCK, ClusteredIndex, pack_dir_entries
 from repro.kernels.range_scorer import ops as scorer_ops
 
 __all__ = [
+    "DOCS_FORMATS",
     "DeviceIndex",
     "IMPACT_BIAS",
     "IMPACT_DTYPES",
@@ -56,6 +57,7 @@ __all__ = [
 
 IMPACT_BIAS = scorer_ops.IMPACT_BIAS
 IMPACT_DTYPES = ("int32", "int8")
+DOCS_FORMATS = scorer_ops.DOCS_FORMATS
 
 
 def pack_impacts(impacts: np.ndarray, impact_dtype: str) -> np.ndarray:
@@ -75,9 +77,17 @@ def pack_impacts(impacts: np.ndarray, impact_dtype: str) -> np.ndarray:
 
 
 class DeviceIndex(NamedTuple):
-    """jnp mirror of the host index (flat arrays only — a valid pytree)."""
+    """jnp mirror of the host index (flat arrays only — a valid pytree).
 
-    docs: jnp.ndarray  # [nnz] int32
+    Under ``docs_format="packed"`` (DESIGN.md §12), ``docs`` shrinks to a
+    (1,)-placeholder (never gathered) and the three ``pack_*`` leaves carry
+    the bit-packed delta stream plus its per-block merged directory
+    (``pack_dir_entries``), parallel to ``blk_start``. They default to
+    None in the raw-int32 layout; None leaves vanish from the pytree, so
+    vmap/shard_map over either shape works unchanged.
+    """
+
+    docs: jnp.ndarray  # [nnz] int32 (packed: [1] placeholder)
     impacts: jnp.ndarray  # [nnz] int32, or int8 biased by IMPACT_BIAS (§8)
     blk_start: jnp.ndarray  # [NB] int32
     blk_len: jnp.ndarray  # [NB] int32
@@ -85,6 +95,9 @@ class DeviceIndex(NamedTuple):
     bounds_dense: jnp.ndarray  # [V, R] int32
     range_starts: jnp.ndarray  # [R] int32
     range_sizes: jnp.ndarray  # [R] int32
+    pack_words: jnp.ndarray | None = None  # [n_words] uint32 delta stream
+    pack_dir: jnp.ndarray | None = None  # [NB] int32 merged (start | width)
+    pack_first: jnp.ndarray | None = None  # [NB] int32 first docid per block
 
 
 class TopKState(NamedTuple):
@@ -143,7 +156,8 @@ def merge_topk(vals: jnp.ndarray, ids: jnp.ndarray, k: int) -> tuple[jnp.ndarray
 
 
 @functools.partial(
-    jax.jit, static_argnames=("s_pad", "k", "impl", "prune_blocks", "interpret")
+    jax.jit,
+    static_argnames=("s_pad", "k", "impl", "prune_blocks", "interpret", "docs_format"),
 )
 def score_range_step(
     dix: DeviceIndex,
@@ -157,6 +171,7 @@ def score_range_step(
     impl: str = "xla",
     prune_blocks: bool = True,
     interpret: bool = True,
+    docs_format: str = "int32",
 ) -> TopKState:
     """Score one range and merge its top-k into the running state."""
     th = theta(state)
@@ -171,6 +186,15 @@ def score_range_step(
         # terms' bounds can beat the current threshold.
         keep = keep & (maximp + rest > th)
 
+    pack_kw = {}
+    if docs_format == "packed":
+        # Per-block packed directory rows travel with the block table; the
+        # shared word stream goes through whole (DESIGN.md §12).
+        pack_kw = dict(
+            pack_words=dix.pack_words,
+            pack_dir=dix.pack_dir[safe_ids],
+            pack_firsts=dix.pack_first[safe_ids],
+        )
     acc = scorer_ops.score_blocks(
         dix.docs,
         dix.impacts,
@@ -181,6 +205,8 @@ def score_range_step(
         s_pad=s_pad,
         impl=impl,
         interpret=interpret,
+        docs_format=docs_format,
+        **pack_kw,
     )
 
     vals, loc = jax.lax.top_k(acc, k)
@@ -289,6 +315,7 @@ def _traverse_loop(
     prune_blocks: bool,
     impl: str,
     interpret: bool,
+    docs_format: str = "int32",
 ) -> TraverseCarry:
     """The one range-at-a-time while_loop both entry points share.
 
@@ -332,6 +359,7 @@ def _traverse_loop(
                 impl=impl,
                 prune_blocks=prune_blocks,
                 interpret=interpret,
+                docs_format=docs_format,
             )
 
         state = jax.lax.cond(do, run, lambda st: st, state)
@@ -350,7 +378,10 @@ def _traverse_loop(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("s_pad", "k", "impl", "prune_blocks", "safe_stop", "interpret"),
+    static_argnames=(
+        "s_pad", "k", "impl", "prune_blocks", "safe_stop", "interpret",
+        "docs_format",
+    ),
 )
 def device_traverse(
     dix: DeviceIndex,
@@ -367,6 +398,7 @@ def device_traverse(
     prune_blocks: bool = True,
     impl: str = "xla",
     interpret: bool = True,
+    docs_format: str = "int32",
 ) -> TraverseResult:
     """Whole-query traversal in a lax.while_loop (device-side anytime mode)."""
     carry = _traverse_loop(
@@ -385,13 +417,17 @@ def device_traverse(
         prune_blocks=prune_blocks,
         impl=impl,
         interpret=interpret,
+        docs_format=docs_format,
     )
     return carry_result(carry)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("s_pad", "k", "impl", "prune_blocks", "safe_stop", "interpret"),
+    static_argnames=(
+        "s_pad", "k", "impl", "prune_blocks", "safe_stop", "interpret",
+        "docs_format",
+    ),
 )
 def batched_traverse(
     dix: DeviceIndex,
@@ -408,6 +444,7 @@ def batched_traverse(
     prune_blocks: bool = True,
     impl: str = "xla",
     interpret: bool = True,
+    docs_format: str = "int32",
 ) -> TraverseResult:
     """vmapped ``device_traverse`` over a stacked batch of query plans.
 
@@ -435,6 +472,7 @@ def batched_traverse(
             prune_blocks=prune_blocks,
             impl=impl,
             interpret=interpret,
+            docs_format=docs_format,
         )
 
     return jax.vmap(one)(
@@ -446,6 +484,7 @@ def batched_traverse(
     jax.jit,
     static_argnames=(
         "s_pad", "k", "quantum", "impl", "prune_blocks", "safe_stop", "interpret",
+        "docs_format",
     ),
 )
 def batched_traverse_resume(
@@ -465,6 +504,7 @@ def batched_traverse_resume(
     prune_blocks: bool = True,
     impl: str = "xla",
     interpret: bool = True,
+    docs_format: str = "int32",
 ) -> TraverseCarry:
     """Resumable entry point: advance every lane at most ``quantum`` ranges.
 
@@ -497,6 +537,7 @@ def batched_traverse_resume(
             prune_blocks=prune_blocks,
             impl=impl,
             interpret=interpret,
+            docs_format=docs_format,
         )
 
     return jax.vmap(one)(
@@ -573,6 +614,9 @@ class Engine:
     baseline; safe stop then uses the whole-collection bound).
     ``impact_dtype``: "int32" (default) or "int8" — native 8-bit postings
     impacts in HBM, widened only inside the scorer gather (DESIGN.md §8).
+    ``docs_format``: "int32" (default) or "packed" — bit-packed per-block
+    docid deltas in HBM, decoded inside the scorer (DESIGN.md §12); bitwise
+    identical results by contract.
     """
 
     def __init__(
@@ -584,6 +628,7 @@ class Engine:
         impl: str = "xla",
         interpret: bool = True,
         impact_dtype: str = "int32",
+        docs_format: str = "int32",
     ):
         self.index = index
         self.k = k
@@ -599,11 +644,27 @@ class Engine:
                 f"got {index.quantizer.bits}"
             )
         self.impact_dtype = impact_dtype
+        if docs_format not in DOCS_FORMATS:
+            raise ValueError(f"docs_format {docs_format!r} not in {DOCS_FORMATS}")
+        self.docs_format = docs_format
         self.s_pad = int(
             (index.max_range_size + BLOCK - 1) // BLOCK * BLOCK
         ) or BLOCK
+        if docs_format == "packed":
+            packed = index.packed_postings()
+            # The raw docid array stays on the host; the scorer never
+            # gathers it, so a (1,)-placeholder keeps the pytree shape.
+            docs_dev = jnp.zeros((1,), jnp.int32)
+            pack_dev = dict(
+                pack_words=jnp.asarray(packed.words, jnp.uint32),
+                pack_dir=jnp.asarray(pack_dir_entries(packed), jnp.int32),
+                pack_first=jnp.asarray(packed.blk_first, jnp.int32),
+            )
+        else:
+            docs_dev = jnp.asarray(index.docs, jnp.int32)
+            pack_dev = {}
         self.dix = DeviceIndex(
-            docs=jnp.asarray(index.docs, jnp.int32),
+            docs=docs_dev,
             impacts=jnp.asarray(pack_impacts(index.impacts, impact_dtype)),
             blk_start=jnp.asarray(index.blk_start, jnp.int32),
             blk_len=jnp.asarray(index.blk_len, jnp.int32),
@@ -611,21 +672,23 @@ class Engine:
             bounds_dense=jnp.asarray(index.bounds_dense, jnp.int32),
             range_starts=jnp.asarray(index.range_starts, jnp.int32),
             range_sizes=jnp.asarray(index.arrangement.range_sizes, jnp.int32),
+            **pack_dev,
         )
 
     @classmethod
     def from_artifact(cls, path: str, **kwargs) -> "Engine":
         """Load a saved index artifact (``repro.index_io``) into an engine.
 
-        ``impact_dtype`` defaults to the dtype the artifact was saved with,
-        so an int8 artifact serves int8 in HBM unless overridden.
+        ``impact_dtype`` and ``docs_format`` default to how the artifact
+        was saved, so an int8/packed artifact serves int8/packed in HBM
+        unless overridden.
         """
         from repro import index_io  # local: index_io sits above core
 
         index = index_io.load_index(path)
-        kwargs.setdefault(
-            "impact_dtype", index_io.read_manifest(path)["impact_dtype"]
-        )
+        manifest = index_io.read_manifest(path)
+        kwargs.setdefault("impact_dtype", manifest["impact_dtype"])
+        kwargs.setdefault("docs_format", manifest.get("docs_format", "int32"))
         return cls(index, **kwargs)
 
     # ------------------------------------------------------------- planning
@@ -695,6 +758,7 @@ class Engine:
             impl=self.impl,
             prune_blocks=True,
             interpret=self.interpret,
+            docs_format=self.docs_format,
         )
 
     def traverse(
@@ -720,6 +784,7 @@ class Engine:
             prune_blocks=prune_blocks,
             impl=self.impl,
             interpret=self.interpret,
+            docs_format=self.docs_format,
         )
 
     # ----------------------------------------------------------------- util

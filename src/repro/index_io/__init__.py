@@ -22,11 +22,18 @@ corpus appends as delta segments chained by ``parent_fingerprint``;
 ``append_index`` is the one-call append-and-publish, ``compact`` squashes a
 chain into a fresh base bitwise-equal to a from-scratch build.
 
-CLI: ``python -m repro.index_io {build,append,compact,log,inspect,validate}``.
+Bit-packed docids (DESIGN.md §12): format v2 artifacts can persist the
+docid stream as per-block fixed-width packed deltas (``docs_format=
+"packed"``); ``repack`` migrates existing artifacts in place-for-place
+with an identical fingerprint.
+
+CLI: ``python -m repro.index_io
+{build,append,compact,repack,log,inspect,validate}``.
 """
 
 from repro.index_io.artifact import (  # noqa: F401
     FORMAT_VERSION,
+    SUPPORTED_FORMAT_VERSIONS,
     ArtifactError,
     CorruptArtifactError,
     VersionMismatchError,
@@ -38,6 +45,7 @@ from repro.index_io.artifact import (  # noqa: F401
     load_index,
     load_shards,
     read_manifest,
+    repack,
     save_delta,
     save_index,
     save_shards,
@@ -53,6 +61,7 @@ from repro.index_io.corpus_io import (  # noqa: F401
 
 __all__ = [
     "FORMAT_VERSION",
+    "SUPPORTED_FORMAT_VERSIONS",
     "ArtifactError",
     "CorruptArtifactError",
     "MissingDependencyError",
@@ -69,6 +78,7 @@ __all__ = [
     "read_corpus",
     "read_manifest",
     "register_reader",
+    "repack",
     "save_delta",
     "save_index",
     "save_shards",

@@ -2,10 +2,13 @@
 
     python -m repro.index_io build    --out DIR [--reader synth|tsv|jsonl|ciff|ir_datasets]
                                       [--source PATH_OR_ID] [--impact-dtype int8|int32]
+                                      [--docs-format int32|packed]
                                       [--shards N] [index-build options]
     python -m repro.index_io append   --parent DIR --out DIR [--reader ...]
                                       [--source ...] [--n-ranges N] [--strategy S]
     python -m repro.index_io compact  DIR --out DIR [--impact-dtype int8|int32]
+    python -m repro.index_io repack   DIR --out DIR [--docs-format int32|packed]
+                                      [--impact-dtype int8|int32]
     python -m repro.index_io log      DIR
     python -m repro.index_io inspect  DIR [--json]
     python -m repro.index_io validate DIR
@@ -14,7 +17,9 @@
 cluster-skipping index, and saves a versioned artifact (optionally plus a
 range-sharded artifact). ``append`` ingests a *delta* corpus and publishes
 it as a chain link under an existing artifact (or chain head); ``compact``
-squashes a chain into a fresh base; ``log`` prints the chain links and any
+squashes a chain into a fresh base; ``repack`` migrates an artifact to a
+different docid encoding (DESIGN.md §12 bit-packed deltas) with an
+identical fingerprint; ``log`` prints the chain links and any
 topology-journal records at the head. ``inspect`` prints the manifest,
 per-array table, and space report without loading postings eagerly.
 ``validate`` deep-checks checksums, dtypes/shapes, and the index
@@ -75,8 +80,12 @@ def _build(args: argparse.Namespace) -> int:
     artifact.save_index(
         index, args.out, impact_dtype=args.impact_dtype,
         build_params=build_params, overwrite=args.overwrite,
+        docs_format=args.docs_format,
     )
-    print(f"saved {args.out} (impact_dtype={args.impact_dtype})")
+    print(
+        f"saved {args.out} (impact_dtype={args.impact_dtype}, "
+        f"docs_format={args.docs_format})"
+    )
 
     if args.shards:
         shards = shard_device_index(index, args.shards)
@@ -139,6 +148,26 @@ def _compact(args: argparse.Namespace) -> int:
     return 0
 
 
+def _repack(args: argparse.Namespace) -> int:
+    t0 = time.perf_counter()
+    src = artifact.read_manifest(args.path)
+    artifact.repack(
+        args.path, args.out,
+        docs_format=args.docs_format, impact_dtype=args.impact_dtype,
+        overwrite=args.overwrite,
+    )
+    t1 = time.perf_counter()
+    head = artifact.read_manifest(args.out)
+    print(
+        f"repacked {args.path} "
+        f"(docs_format={src.get('docs_format', 'int32')}) -> {args.out} "
+        f"(docs_format={head['docs_format']}, "
+        f"impact_dtype={head['impact_dtype']}), "
+        f"fingerprint {head['fingerprint']} ({t1 - t0:.1f}s)"
+    )
+    return 0
+
+
 def _log(args: argparse.Namespace) -> int:
     # Chain links, head first (iter_chain owns the walk + cycle guard).
     for path, manifest in artifact.iter_chain(args.path):
@@ -196,7 +225,8 @@ def _inspect(args: argparse.Namespace) -> int:
             f"  {manifest['n_docs']} docs, {manifest['n_terms']} terms, "
             f"{manifest['arrangement']['n_ranges']} ranges "
             f"({manifest['arrangement']['strategy']}), "
-            f"{q['bits']}-bit impacts stored as {manifest['impact_dtype']}"
+            f"{q['bits']}-bit impacts stored as {manifest['impact_dtype']}, "
+            f"docids {manifest.get('docs_format', 'int32')}"
         )
         print(f"  fingerprint {manifest['fingerprint']}")
         rows = manifest["arrays"].items()
@@ -235,15 +265,22 @@ def _inspect(args: argparse.Namespace) -> int:
         # cheap on collection-scale artifacts.
         from repro.core.clustered_index import device_bytes_report
 
+        docs_format = manifest.get("docs_format", "int32")
+        arrays = manifest["arrays"]
+        n_pack_words = (
+            arrays["pack_words"]["shape"][0] if docs_format == "packed" else 0
+        )
         dev = device_bytes_report(
-            nnz=manifest["arrays"]["docs"]["shape"][0],
-            n_blocks=manifest["arrays"]["blk_start"]["shape"][0],
+            nnz=manifest.get("nnz", arrays["impacts"]["shape"][0]),
+            n_blocks=arrays["blk_start"]["shape"][0],
             n_terms=manifest["n_terms"],
             n_ranges=manifest["arrangement"]["n_ranges"],
             impact_dtype=manifest["impact_dtype"],
+            docs_format=docs_format,
+            n_pack_words=n_pack_words,
         )
         print(
-            f"  device (HBM) at {manifest['impact_dtype']}: "
+            f"  device (HBM) at {manifest['impact_dtype']}/{docs_format}: "
             f"postings={dev['postings']} B (docs={dev['docs']}, "
             f"impacts={dev['impacts']}), total={dev['total']} B"
         )
@@ -275,6 +312,8 @@ def main(argv: list[str] | None = None) -> int:
     b.add_argument("--source", default="",
                    help="reader source: file path, or ir_datasets id")
     b.add_argument("--impact-dtype", default="int8", choices=("int8", "int32"))
+    b.add_argument("--docs-format", default="int32", choices=("int32", "packed"),
+                   help="docid storage: raw int32 or bit-packed block deltas")
     b.add_argument("--overwrite", action="store_true")
     b.add_argument("--shards", type=int, default=0,
                    help="also save a range-sharded artifact with N shards")
@@ -324,6 +363,19 @@ def main(argv: list[str] | None = None) -> int:
                    help="storage dtype (default: the head's dtype)")
     c.add_argument("--overwrite", action="store_true")
     c.set_defaults(fn=_compact)
+
+    r = sub.add_parser(
+        "repack", help="re-save an artifact under another docid encoding"
+    )
+    r.add_argument("path", help="source index artifact")
+    r.add_argument("--out", required=True, help="repacked artifact directory")
+    r.add_argument("--docs-format", default="packed",
+                   choices=("int32", "packed"),
+                   help="target docid encoding (default: packed)")
+    r.add_argument("--impact-dtype", default=None, choices=("int8", "int32"),
+                   help="storage dtype (default: the source's dtype)")
+    r.add_argument("--overwrite", action="store_true")
+    r.set_defaults(fn=_repack)
 
     g = sub.add_parser(
         "log", help="print the delta chain and topology-journal records"

@@ -50,8 +50,10 @@ from repro.core.clustered_index import (
     ClusteredIndex,
     IndexDelta,
     IndexShard,
+    PackedPostings,
     apply_delta,
     plan_delta,
+    unpack_docs,
 )
 from repro.core.quantize import Quantizer
 from repro.core.range_daat import IMPACT_BIAS, IMPACT_DTYPES, pack_impacts
@@ -71,6 +73,7 @@ __all__ = [
     "load_index",
     "load_shards",
     "read_manifest",
+    "repack",
     "save_delta",
     "save_index",
     "save_shards",
@@ -78,7 +81,13 @@ __all__ = [
 ]
 
 FORMAT = "repro-index-artifact"
-FORMAT_VERSION = 1
+# Version history:
+#   1 — initial artifact layout (raw int32 docs.npy always present).
+#   2 — optional bit-packed docid deltas (DESIGN.md §12): manifest key
+#       "docs_format", "packed" artifacts replace docs.npy with the
+#       PACKED_ARRAYS below. v1 artifacts remain readable; writes are v2.
+FORMAT_VERSION = 2
+SUPPORTED_FORMAT_VERSIONS = (1, 2)
 
 # Readers retry once on a path that vanished mid-read: the overwrite publish
 # (``_atomic_publish``) swaps via rename-aside + rename-in, so a healthy
@@ -97,6 +106,10 @@ INDEX_ARRAYS = (
     "term_bound", "bounds_dense",
     "doc_order", "range_ends",
 )
+
+# Arrays replacing "docs" under docs_format="packed" (DESIGN.md §12): the
+# shared uint32 delta word stream plus its per-block directory.
+PACKED_ARRAYS = ("pack_words", "pack_start", "pack_width", "pack_first")
 
 SHARD_ARRAYS = (
     "docs", "impacts", "blk_start", "blk_len", "blk_maxdoc", "blk_maximp",
@@ -308,10 +321,11 @@ def read_manifest(path: str) -> dict:
             f"(format={manifest.get('format') if isinstance(manifest, dict) else None!r})"
         )
     version = manifest.get("format_version")
-    if version != FORMAT_VERSION:
+    if version not in SUPPORTED_FORMAT_VERSIONS:
         raise VersionMismatchError(
             f"artifact format_version={version!r}, this reader supports "
-            f"{FORMAT_VERSION} — rebuild the artifact or upgrade the reader"
+            f"{SUPPORTED_FORMAT_VERSIONS} — rebuild the artifact or upgrade "
+            f"the reader"
         )
     return manifest
 
@@ -335,16 +349,22 @@ def save_index(
     impact_dtype: str = "int32",
     build_params: dict | None = None,
     overwrite: bool = False,
+    docs_format: str = "int32",
 ) -> str:
     """Persist a built index as a versioned artifact directory.
 
     ``impact_dtype="int8"`` stores postings impacts as biased int8 codes
     (4x smaller than int32); every other array keeps its native dtype.
-    Returns ``path``.
+    ``docs_format="packed"`` replaces ``docs.npy`` with the bit-packed
+    delta stream + per-block directory (DESIGN.md §12); ``load_index``
+    reconstructs the exact docid array, so the fingerprint — and therefore
+    chain/shard compatibility — is unchanged. Returns ``path``.
     """
     tmp = _staging_dir(path)
     try:
-        return _save_index_into(tmp, index, path, impact_dtype, build_params, overwrite)
+        return _save_index_into(
+            tmp, index, path, impact_dtype, build_params, overwrite, docs_format
+        )
     except BaseException:
         shutil.rmtree(tmp, ignore_errors=True)  # no orphaned staging dirs
         raise
@@ -357,13 +377,30 @@ def _save_index_into(
     impact_dtype: str,
     build_params: dict | None,
     overwrite: bool,
+    docs_format: str = "int32",
 ) -> str:
+    if docs_format not in ("int32", "packed"):
+        raise ValueError(f"docs_format {docs_format!r} not in ('int32', 'packed')")
     arrays = {}
     for name in INDEX_ARRAYS:
+        if name == "docs" and docs_format == "packed":
+            continue
         arr = _index_array(index, name)
         if name == "impacts":
             arr = _pack_disk_impacts(arr, impact_dtype, index.quantizer.bits)
         arrays[name] = _write_array(tmp, os.path.join("arrays", f"{name}.npy"), arr)
+    if docs_format == "packed":
+        packed = index.packed_postings()
+        packed_arrs = {
+            "pack_words": np.asarray(packed.words, np.uint32),
+            "pack_start": np.asarray(packed.blk_word_start, np.int64),
+            "pack_width": np.asarray(packed.blk_width, np.int32),
+            "pack_first": np.asarray(packed.blk_first, np.int32),
+        }
+        for name, arr in packed_arrs.items():
+            arrays[name] = _write_array(
+                tmp, os.path.join("arrays", f"{name}.npy"), arr
+            )
     collection = None
     if index.stats is not None:
         # Frozen collection statistics (DESIGN.md §10): df as an array (it
@@ -387,7 +424,9 @@ def _save_index_into(
         "kind": "clustered_index",
         "n_docs": int(index.n_docs),
         "n_terms": int(index.n_terms),
+        "nnz": int(index.nnz),
         "impact_dtype": impact_dtype,
+        "docs_format": docs_format,
         "quantizer": {
             "bits": int(index.quantizer.bits),
             "scale": float(index.quantizer.scale),
@@ -427,12 +466,28 @@ def load_index(path: str, mmap: bool = False) -> ClusteredIndex:
         raise CorruptArtifactError(
             f"expected kind 'clustered_index', got {manifest.get('kind')!r}"
         )
+    docs_format = manifest.get("docs_format", "int32")  # v1: always raw
     metas = manifest.get("arrays", {})
-    missing = [n for n in INDEX_ARRAYS if n not in metas]
+    if docs_format == "packed":
+        expected = [n for n in INDEX_ARRAYS if n != "docs"] + list(PACKED_ARRAYS)
+    else:
+        expected = list(INDEX_ARRAYS)
+    missing = [n for n in expected if n not in metas]
     if missing:
         raise CorruptArtifactError(f"manifest lacks arrays: {missing}")
-    a = {n: _read_array(path, metas[n], n, mmap) for n in INDEX_ARRAYS}
+    a = {n: _read_array(path, metas[n], n, mmap) for n in expected}
     a["impacts"] = _unpack_disk_impacts(a["impacts"], manifest)
+    if docs_format == "packed":
+        # Reconstruct the exact int32 docid array from the packed stream;
+        # the fingerprint check below certifies the decode bitwise.
+        packed = PackedPostings(
+            words=np.asarray(a.pop("pack_words"), np.uint32),
+            blk_word_start=np.asarray(a.pop("pack_start"), np.int64),
+            blk_width=np.asarray(a.pop("pack_width"), np.int32),
+            blk_first=np.asarray(a.pop("pack_first"), np.int32),
+            n_postings=int(a["impacts"].shape[0]),
+        )
+        a["docs"] = unpack_docs(packed, a["blk_start"], a["blk_len"])
 
     q = manifest["quantizer"]
     arrangement = Arrangement(
@@ -477,6 +532,38 @@ def load_index(path: str, mmap: bool = False) -> ClusteredIndex:
             f"loaded arrays {index.fingerprint()}"
         )
     return index
+
+
+def repack(
+    path: str,
+    out: str,
+    docs_format: str = "packed",
+    impact_dtype: str | None = None,
+    overwrite: bool = False,
+) -> str:
+    """Re-save an existing index artifact under another ``docs_format``.
+
+    The migration path for pre-v2 (and raw-int32 v2) artifacts: load,
+    re-encode the docid stream, save at the current format version. The
+    index arrays are untouched bytes-for-bytes — a repacked artifact's
+    arrays are identical to saving the source index packed from scratch,
+    and its fingerprint matches the source. ``impact_dtype`` defaults to
+    whatever the source artifact stored. Returns ``out``.
+    """
+    manifest = read_manifest(path)
+    index = load_index(path)
+    if impact_dtype is None:
+        impact_dtype = manifest.get("impact_dtype", "int32")
+    params = dict(manifest.get("build_params") or {})
+    params["repacked_from"] = os.path.abspath(path)
+    return save_index(
+        index,
+        out,
+        impact_dtype=impact_dtype,
+        build_params=params,
+        overwrite=overwrite,
+        docs_format=docs_format,
+    )
 
 
 # --------------------------------------------------------------------------

@@ -29,10 +29,19 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.clustered_index import PACK_DIR_BITS
+
 DEFAULT_S_TILE = 512
 DEFAULT_P_TILE = 1024
 
-__all__ = ["scatter_accumulate_pallas"]
+BLOCK = 128  # postings per block; matches core.clustered_index.BLOCK
+# A width-32 block needs BLOCK*32/32 = BLOCK words; every narrower block
+# needs fewer. Fixed-size per-block slices of this many words keep the
+# decode gather-free (dynamic start, static size — pl.ds).
+WORDS_PER_BLOCK = BLOCK
+DEFAULT_B_TILE = 8
+
+__all__ = ["scatter_accumulate_pallas", "unpack_locals_pallas"]
 
 
 def _scatter_kernel(ids_ref, vals_ref, acc_ref, *, s_tile: int, p_tile: int):
@@ -93,3 +102,113 @@ def scatter_accumulate_pallas(
         interpret=interpret,
     )(ids, vals)
     return acc[:s_pad].astype(jnp.int32)
+
+
+def _unpack_kernel(
+    words_ref, dir_ref, fd_ref, ln_ref, vb_ref, rs_ref, out_ref,
+    *, b_tile: int,
+):
+    """Decode one tile of blocks: packed deltas -> range-local docids.
+
+    Per block: split the merged directory entry into (word_start, width),
+    take a fixed-size WORDS_PER_BLOCK slice of the word stream (dynamic
+    start, static size — no gather), then a *static* repeat/shift decode
+    per legal width selected by ``jnp.where``: for width w, lane j's word
+    is slice[j*w // 32], which for the word-aligned ladder is slice[:16]
+    repeated 8x (w=4), slice[:32] repeated 4x (w=8), slice[:64] repeated
+    2x (w=16), or the slice itself (w=32), with shift (j*w) % 32. Deltas
+    past the block length are zeroed before the 128-lane inclusive
+    cumsum, exactly like the oracle.
+    """
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, BLOCK), 1)
+
+    def per_block(b, carry):
+        entry = dir_ref[b]
+        ws = entry & ((1 << PACK_DIR_BITS) - 1)
+        code = entry >> PACK_DIR_BITS
+        # PACK_WIDTHS = (0, 4, 8, 16, 32): code c > 0 maps to 2 << c, and a
+        # table lookup would capture a constant array (illegal in Pallas).
+        w = jnp.where(code == 0, 0, 2 << code)
+        chunk = words_ref[pl.ds(ws, WORDS_PER_BLOCK)].reshape(1, BLOCK)
+        c4 = jnp.repeat(chunk[:, : BLOCK // 8], 8, axis=1)
+        c8 = jnp.repeat(chunk[:, : BLOCK // 4], 4, axis=1)
+        c16 = jnp.repeat(chunk[:, : BLOCK // 2], 2, axis=1)
+        d4 = (c4 >> ((lane % 8) * 4).astype(jnp.uint32)) & jnp.uint32(0xF)
+        d8 = (c8 >> ((lane % 4) * 8).astype(jnp.uint32)) & jnp.uint32(0xFF)
+        d16 = (c16 >> ((lane % 2) * 16).astype(jnp.uint32)) & jnp.uint32(0xFFFF)
+        delta = jnp.where(
+            w == 4,
+            d4,
+            jnp.where(
+                w == 8,
+                d8,
+                jnp.where(
+                    w == 16, d16, jnp.where(w == 32, chunk, jnp.uint32(0))
+                ),
+            ),
+        )
+        in_len = lane < ln_ref[b]
+        delta = jnp.where(in_len, delta, jnp.uint32(0)).astype(jnp.int32)
+        docs = fd_ref[b] + jnp.cumsum(delta, axis=1)
+        loc = jnp.where(in_len & (vb_ref[b] != 0), docs - rs_ref[0], -1)
+        out_ref[pl.ds(b, 1), :] = loc.astype(jnp.int32)
+        return carry
+
+    jax.lax.fori_loop(0, b_tile, per_block, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("b_tile", "interpret"))
+def unpack_locals_pallas(
+    pack_words: jnp.ndarray,  # [n_words] uint32 packed delta stream
+    starts: jnp.ndarray,  # [B] block start offsets (-1 pad ok; validity only)
+    lens: jnp.ndarray,  # [B] int32 block lengths
+    pack_dir: jnp.ndarray,  # [B] int32 merged (word_start | width code)
+    pack_firsts: jnp.ndarray,  # [B] absolute first docid per block
+    keep: jnp.ndarray,  # [B] bool survives pruning
+    range_start: jnp.ndarray,  # scalar int32
+    *,
+    b_tile: int = DEFAULT_B_TILE,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Pallas decode of packed blocks to [B*BLOCK] local ids (-1 invalid).
+
+    Matches ``ref.gather_block_postings_packed``'s id lanes bitwise. The
+    word stream is padded by WORDS_PER_BLOCK zero words so the fixed-size
+    per-block slice never overruns, and pruned / padding rows decode to
+    all -1 via the validity lane (their directory entries are clamped to
+    a zero entry — word 0 width 0 — which is always in range).
+    """
+    B = starts.shape[0]
+    words = jnp.concatenate(
+        [pack_words.astype(jnp.uint32), jnp.zeros((WORDS_PER_BLOCK,), jnp.uint32)]
+    )
+    vb = (keep & (starts >= 0)).astype(jnp.int32)
+    de = jnp.maximum(pack_dir.astype(jnp.int32), 0)
+    fd = pack_firsts.astype(jnp.int32)
+    ln = lens.astype(jnp.int32)
+    rs = jnp.reshape(range_start.astype(jnp.int32), (1,))
+    b_tile = min(b_tile, B)
+    bp = (B + b_tile - 1) // b_tile * b_tile
+    if bp != B:
+        pad = bp - B
+        zeros = jnp.zeros((pad,), jnp.int32)
+        de = jnp.concatenate([de, zeros])
+        fd = jnp.concatenate([fd, zeros])
+        ln = jnp.concatenate([ln, zeros])
+        vb = jnp.concatenate([vb, zeros])
+
+    n_words = words.shape[0]
+    dir_spec = pl.BlockSpec((b_tile,), lambda i: (i,))
+    out = pl.pallas_call(
+        functools.partial(_unpack_kernel, b_tile=b_tile),
+        grid=(bp // b_tile,),
+        in_specs=[
+            pl.BlockSpec((n_words,), lambda i: (0,)),
+            dir_spec, dir_spec, dir_spec, dir_spec,
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((b_tile, BLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, BLOCK), jnp.int32),
+        interpret=interpret,
+    )(words, de, fd, ln, vb, rs)
+    return out[:B].reshape(B * BLOCK)

@@ -197,6 +197,7 @@ class BatchEngine:
             prune_blocks=prune_blocks,
             impl=eng.impl,
             interpret=eng.interpret,
+            docs_format=eng.docs_format,
         )
         self.compiled_shapes.add((batch, width))
         self.batches_run += 1

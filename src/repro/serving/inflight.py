@@ -232,6 +232,7 @@ class InflightServer:
             quantum=self.quantum,
             impl=eng.impl,
             interpret=eng.interpret,
+            docs_format=eng.docs_format,
         )
         self.compiled_shapes.add((self.n_slots, front.width))
         self.steps_run += 1

@@ -40,6 +40,8 @@ import numpy as np
 from repro.core.clustered_index import (
     BLOCK,
     IndexShard,
+    pack_dir_entries,
+    pack_docs,
     shard_cuts,
     shard_device_index,
 )
@@ -87,7 +89,10 @@ def _merge_gathered(vals, gids, k):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("s_pad", "k", "safe_stop", "prune_blocks", "impl", "interpret"),
+    static_argnames=(
+        "s_pad", "k", "safe_stop", "prune_blocks", "impl", "interpret",
+        "docs_format",
+    ),
 )
 def sharded_batched_traverse(
     dix: DeviceIndex,  # stacked shard-major leaves [S, ...]
@@ -105,6 +110,7 @@ def sharded_batched_traverse(
     prune_blocks: bool = True,
     impl: str = "xla",
     interpret: bool = True,
+    docs_format: str = "int32",
 ):
     """(batch x shard) traversal on one device: vmap over both axes.
 
@@ -127,6 +133,7 @@ def sharded_batched_traverse(
             prune_blocks=prune_blocks,
             impl=impl,
             interpret=interpret,
+            docs_format=docs_format,
         )
 
     over_shards = jax.vmap(one, in_axes=(0, 0, 0, 0, 0, 0, 0))
@@ -159,6 +166,7 @@ def make_mesh_dispatch(
     impl: str,
     interpret: bool,
     data_axis: str | None = None,
+    docs_format: str = "int32",
 ):
     """Compile the (batch x shard) step with one shard per mesh device.
 
@@ -196,6 +204,7 @@ def make_mesh_dispatch(
                 prune_blocks=prune_blocks,
                 impl=impl,
                 interpret=interpret,
+                docs_format=docs_format,
             )
 
         res = jax.vmap(one)(
@@ -218,6 +227,13 @@ def make_mesh_dispatch(
             diag(res.exit_budget),
         )
 
+    pack_specs = {}
+    if docs_format == "packed":
+        pack_specs = dict(
+            pack_words=P(axis, None),
+            pack_dir=P(axis, None),
+            pack_first=P(axis, None),
+        )
     dix_specs = DeviceIndex(
         docs=P(axis, None),
         impacts=P(axis, None),
@@ -227,6 +243,7 @@ def make_mesh_dispatch(
         bounds_dense=P(axis, None, None),
         range_starts=P(axis, None),
         range_sizes=P(axis, None),
+        **pack_specs,
     )
     da = data_axis  # None -> batch replicated on every shard device (§4)
     fn = shard_map(
@@ -350,6 +367,7 @@ class ShardedEngine:
         self.impl = engine.impl
         self.interpret = engine.interpret
         self.impact_dtype = engine.impact_dtype
+        self.docs_format = engine.docs_format
         if shards is None:
             shards = shard_device_index(engine.index, n_shards)
         elif len(shards) != n_shards:
@@ -384,8 +402,32 @@ class ShardedEngine:
         # postings at 1 B/posting in HBM (DESIGN.md §8); padding lanes are
         # never gathered (blocks only address real offsets), so the pad
         # value is inert at either dtype.
+        if self.docs_format == "packed":
+            # Pack each shard's local docid stream against its own block
+            # geometry (deltas are shard-local, DESIGN.md §12); the stacked
+            # [S, W] leaves pad with zero words / zero directory rows, which
+            # decode to nothing because padded blocks are never addressed.
+            packed = [
+                pack_docs(sh.docs, sh.blk_start, sh.blk_len)
+                for sh in self.shards
+            ]
+            docs_dev = jnp.zeros((self.n_shards, 1), jnp.int32)
+            pack_dev = dict(
+                pack_words=stack(
+                    "words", arrs=[np.asarray(p.words, np.uint32) for p in packed]
+                ),
+                pack_dir=stack(
+                    "pack_dir", arrs=[pack_dir_entries(p) for p in packed]
+                ),
+                pack_first=stack(
+                    "pack_first", arrs=[p.blk_first for p in packed]
+                ),
+            )
+        else:
+            docs_dev = stack("docs")
+            pack_dev = {}
         self.dix = DeviceIndex(
-            docs=stack("docs"),
+            docs=docs_dev,
             impacts=stack(
                 "impacts",
                 arrs=[
@@ -399,6 +441,7 @@ class ShardedEngine:
             bounds_dense=jnp.zeros((self.n_shards, 1, 1), jnp.int32),
             range_starts=stack("range_starts"),
             range_sizes=stack("range_sizes"),
+            **pack_dev,
         )
         self.doc_base = jnp.asarray(self.doc_base_host, jnp.int32)
 
@@ -558,6 +601,7 @@ class ShardedEngine:
                     prune_blocks=prune_blocks,
                     impl=self.impl,
                     interpret=self.interpret,
+                    docs_format=self.docs_format,
                 )
             return self._mesh_fns[key](*args)
         return sharded_batched_traverse(
@@ -568,6 +612,7 @@ class ShardedEngine:
             prune_blocks=prune_blocks,
             impl=self.impl,
             interpret=self.interpret,
+            docs_format=self.docs_format,
         )
 
     # ------------------------------------------------------------ execution

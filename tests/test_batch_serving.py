@@ -13,6 +13,7 @@ import dataclasses
 
 import numpy as np
 import pytest
+from differential import assert_batch_matches_sequential
 
 from repro.core.clustered_index import build_index
 from repro.core.range_daat import Engine, batched_topk_docs, exit_reasons
@@ -37,22 +38,9 @@ def _small_setup(seed: int, n_ranges: int, k: int = 5):
     return eng, [log.terms[i] for i in range(log.n_queries)]
 
 
-def _assert_parity(eng, plans, batch_results, budgets=None, max_ranges=None):
-    for i, (plan, br) in enumerate(zip(plans, batch_results)):
-        kw = {}
-        if budgets is not None:
-            kw["budget_postings"] = int(budgets[i])
-        if max_ranges is not None:
-            kw["max_ranges"] = int(max_ranges[i])
-        single = eng.traverse(plan, **kw)
-        sids, svals = eng.topk_docs(single.state)
-        assert br.doc_ids.tolist() == sids.tolist(), f"query {i} ids"
-        assert br.scores.tolist() == svals.tolist(), f"query {i} scores"
-        assert br.exit_safe == bool(single.exit_safe), f"query {i} safe flag"
-        assert br.exit_budget == bool(single.exit_budget), f"query {i} budget flag"
-        assert br.ranges_processed == int(single.ranges_processed), f"query {i}"
-        assert br.postings == int(np.asarray(single.state.postings)), f"query {i}"
-        assert br.blocks == int(np.asarray(single.state.blocks)), f"query {i}"
+# Batched-vs-sequential parity lives in the shared differential harness
+# (tests/differential.py) so the packed-docid suite pins the same contract.
+_assert_parity = assert_batch_matches_sequential
 
 
 # ------------------------------------------------------------------ bucketing

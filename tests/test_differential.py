@@ -1,0 +1,97 @@
+"""Seed suite for the differential harness (DESIGN.md §12 acceptance).
+
+Pins the bit-packed docid decode path against the raw int32 path through
+the public engine surface: same index, same queries, same budgets — every
+observable identical. Crossed with impact storage dtype and shard count so
+the packed decode is exercised under every representation combination the
+serving stack supports, and under budget exits (the packed path must not
+shift *when* a lane stops, only how docids are stored).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from differential import (
+    EngineConfig,
+    assert_bitwise_equal_engines,
+    assert_results_equal,
+    build_engine,
+    observe_query,
+)
+
+from repro.core.clustered_index import build_index
+from repro.data.synth import make_corpus, make_query_log
+
+INT32_MAX = 2**31 - 1
+
+
+def _corpus_and_queries(seed: int, n_queries: int = 8):
+    corpus = make_corpus(
+        n_docs=900, n_terms=700, n_topics=4, mean_doc_len=50, seed=seed
+    )
+    log = make_query_log(corpus, n_queries=n_queries, seed=seed + 1)
+    return corpus, [log.terms[i] for i in range(log.n_queries)]
+
+
+@pytest.mark.parametrize("impact_dtype", ["int8", "int32"])
+@pytest.mark.parametrize("n_shards", [1, 2])
+def test_packed_docs_bitwise_equal_int32(impact_dtype, n_shards):
+    """Tentpole invariant: packed decode == raw int32 gather, bitwise."""
+    corpus, queries = _corpus_and_queries(seed=41)
+    assert_bitwise_equal_engines(
+        EngineConfig(impact_dtype=impact_dtype, docs_format="int32",
+                     n_shards=n_shards),
+        EngineConfig(impact_dtype=impact_dtype, docs_format="packed",
+                     n_shards=n_shards),
+        corpus,
+        queries,
+        n_ranges=4,
+    )
+
+
+def test_packed_parity_under_budget_exits():
+    """Identical caps must produce identical budget-exit timing."""
+    corpus, queries = _corpus_and_queries(seed=43)
+    rng = np.random.default_rng(0)
+    budgets = rng.choice([1, 150, 600, INT32_MAX], size=len(queries))
+    maxr = rng.choice([0, 1, 2, INT32_MAX], size=len(queries))
+    assert_bitwise_equal_engines(
+        EngineConfig(impact_dtype="int8", docs_format="int32"),
+        EngineConfig(impact_dtype="int8", docs_format="packed"),
+        corpus,
+        queries,
+        budgets=budgets,
+        max_ranges=maxr,
+        n_ranges=6,
+    )
+
+
+def test_packed_parity_pallas_impl():
+    """Pallas packed decode (interpret) == XLA int32 reference."""
+    corpus, queries = _corpus_and_queries(seed=47, n_queries=4)
+    assert_bitwise_equal_engines(
+        EngineConfig(impact_dtype="int8", docs_format="int32", impl="xla"),
+        EngineConfig(impact_dtype="int8", docs_format="packed", impl="pallas"),
+        corpus,
+        queries,
+        n_ranges=3,
+    )
+
+
+def test_prebuilt_index_accepted_and_divergence_detected():
+    """Harness plumbing: accepts a ClusteredIndex, and actually fails."""
+    corpus, queries = _corpus_and_queries(seed=53, n_queries=3)
+    index = build_index(corpus, n_ranges=3, strategy="clustered")
+    assert_bitwise_equal_engines(
+        EngineConfig(), EngineConfig(docs_format="packed"), index, queries
+    )
+    eng = build_engine(index, EngineConfig(), k=5)
+    ra = observe_query(eng, eng.plan(queries[0]))
+    rb = dict(ra, postings=ra["postings"] + 1)
+    with pytest.raises(AssertionError, match="postings diverged"):
+        assert_results_equal(ra, rb, context="injected")
+    with pytest.raises(ValueError, match="n_shards"):
+        assert_bitwise_equal_engines(
+            EngineConfig(n_shards=1), EngineConfig(n_shards=2), index, queries
+        )

@@ -1,0 +1,120 @@
+"""Golden-artifact compatibility: a pinned v1 artifact must load forever.
+
+``tests/golden/tiny_v1`` is a format-v1 artifact (raw int32 docids, int8
+impacts, no frozen collection stats) committed before the format-v2 bump.
+It pins three guarantees:
+
+  * old artifacts keep loading bitwise under ``SUPPORTED_FORMAT_VERSIONS``
+    (same fingerprint, same arrays as a from-scratch rebuild of the same
+    corpus) — a format bump must never strand deployed indexes;
+  * pre-incremental artifacts keep *refusing* extension, with the same
+    error, because they carry no frozen stats;
+  * ``repack`` migrates the v1 artifact to packed v2 with arrays
+    byte-identical to saving the rebuilt index packed from scratch.
+
+Regenerating the golden (only if the index build itself legitimately
+changes) invalidates the pinned fingerprint below on purpose.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.clustered_index import build_index, extend_index
+from repro.data.synth import make_corpus
+from repro.index_io import (
+    FORMAT_VERSION,
+    VersionMismatchError,
+    load_index,
+    read_manifest,
+    repack,
+    save_index,
+    validate_artifact,
+)
+from repro.index_io.__main__ import main as cli_main
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden", "tiny_v1")
+GOLDEN_FINGERPRINT = "d731d1fda1b4a01a"
+
+
+def _golden_corpus():
+    return make_corpus(
+        n_docs=80, n_terms=60, n_topics=3, mean_doc_len=20, seed=123
+    )
+
+
+def _golden_index():
+    idx = build_index(
+        _golden_corpus(), n_ranges=3, strategy="clustered", bits=8, seed=0
+    )
+    return dataclasses.replace(idx, stats=None)  # golden predates stats
+
+
+def test_golden_v1_loads_bitwise():
+    manifest = read_manifest(GOLDEN)
+    assert manifest["format_version"] == 1 < FORMAT_VERSION
+    assert manifest["fingerprint"] == GOLDEN_FINGERPRINT
+    assert validate_artifact(GOLDEN) == []
+
+    loaded = load_index(GOLDEN)
+    assert loaded.fingerprint() == GOLDEN_FINGERPRINT
+    assert loaded.stats is None
+    rebuilt = _golden_index()
+    assert rebuilt.fingerprint() == GOLDEN_FINGERPRINT
+    np.testing.assert_array_equal(loaded.docs, rebuilt.docs)
+    np.testing.assert_array_equal(loaded.impacts, rebuilt.impacts)
+    np.testing.assert_array_equal(loaded.blk_start, rebuilt.blk_start)
+    np.testing.assert_array_equal(loaded.blk_len, rebuilt.blk_len)
+    np.testing.assert_array_equal(loaded.bounds_dense, rebuilt.bounds_dense)
+
+
+def test_golden_v1_still_refuses_extension():
+    """Stats-less pre-incremental artifacts refuse append, as always."""
+    loaded = load_index(GOLDEN)
+    delta = make_corpus(
+        n_docs=10, n_terms=60, n_topics=3, mean_doc_len=20, seed=321
+    )
+    with pytest.raises(ValueError, match="no frozen collection stats"):
+        extend_index(loaded, delta)
+
+
+def test_unknown_format_version_refused(tmp_path):
+    """The version gate rejects futures explicitly, not with a KeyError."""
+    out = tmp_path / "future"
+    save_index(_golden_index(), str(out))
+    mpath = out / "manifest.json"
+    manifest = json.loads(mpath.read_text())
+    manifest["format_version"] = FORMAT_VERSION + 1
+    mpath.write_text(json.dumps(manifest))
+    with pytest.raises(VersionMismatchError):
+        read_manifest(str(out))
+
+
+def test_repack_golden_equals_from_scratch_packed(tmp_path):
+    """v1 -> packed-v2 migration is bitwise the from-scratch packed save."""
+    repacked = str(tmp_path / "repacked")
+    scratch = str(tmp_path / "scratch")
+    assert cli_main(["repack", GOLDEN, "--out", repacked]) == 0
+    save_index(
+        _golden_index(), scratch, impact_dtype="int8", docs_format="packed"
+    )
+
+    mr = read_manifest(repacked)
+    ms = read_manifest(scratch)
+    assert mr["format_version"] == FORMAT_VERSION
+    assert mr["docs_format"] == "packed" and "docs" not in mr["arrays"]
+    assert mr["fingerprint"] == GOLDEN_FINGERPRINT
+    assert mr["arrays"].keys() == ms["arrays"].keys()
+    for name in mr["arrays"]:
+        assert mr["arrays"][name]["sha256"] == ms["arrays"][name]["sha256"], name
+    assert mr["build_params"]["repacked_from"] == os.path.abspath(GOLDEN)
+
+    assert validate_artifact(repacked) == []
+    round_tripped = load_index(repacked)
+    assert round_tripped.fingerprint() == GOLDEN_FINGERPRINT
+    np.testing.assert_array_equal(round_tripped.docs, load_index(GOLDEN).docs)

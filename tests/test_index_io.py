@@ -203,12 +203,17 @@ def test_from_artifact_rejects_stale_shards(index, tmp_path):
 def test_device_bytes_match_uploaded_buffers(index, impact_dtype):
     eng = Engine(index, impact_dtype=impact_dtype)
     dev = index.space_report(impact_dtype)["device_bytes"]
-    for name in eng.dix._fields:
+    # pack_* leaves are None in the raw-int32 docid layout and accounted
+    # as a single "docs" line in the packed one (tests/test_packed_postings
+    # covers that path), so only materialized non-pack leaves line up 1:1.
+    fields = [
+        n for n in eng.dix._fields
+        if not n.startswith("pack_") and getattr(eng.dix, n) is not None
+    ]
+    for name in fields:
         assert dev[name] == np.asarray(getattr(eng.dix, name)).nbytes, name
     assert dev["postings"] == dev["docs"] + dev["impacts"]
-    assert dev["total"] == sum(
-        dev[n] for n in eng.dix._fields
-    )
+    assert dev["total"] == sum(dev[n] for n in fields)
 
 
 def test_int8_halves_postings_hbm(index):

@@ -11,8 +11,12 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
+from repro.core.clustered_index import pack_dir_entries, pack_docs
 from repro.kernels.range_scorer import ref
-from repro.kernels.range_scorer.kernel import scatter_accumulate_pallas
+from repro.kernels.range_scorer.kernel import (
+    scatter_accumulate_pallas,
+    unpack_locals_pallas,
+)
 from repro.kernels.range_scorer.ops import score_blocks
 
 
@@ -133,6 +137,129 @@ def test_compiled_pallas_backend_smoke():
         cids, cvals = compiled.topk_docs(b.state)
         assert cids.tolist() == rids.tolist()
         assert cvals.tolist() == rvals.tolist()
+
+
+# --------------------------------------------------- packed docid decoding
+
+
+def _packed_pool(rng, n_pool, max_deltas=(0, 1, 200, 255, 300, 70_000)):
+    """Pool of contiguous blocks spanning every pack width, pre-packed."""
+    blk_len = rng.integers(1, ref.BLOCK + 1, size=n_pool).astype(np.int64)
+    blk_start = np.cumsum(blk_len) - blk_len
+    chunks = []
+    for length in blk_len:
+        md = int(rng.choice(max_deltas))
+        d = np.zeros(int(length), np.int64)
+        if md:
+            d[1:] = rng.integers(0, md + 1, size=int(length) - 1)
+        chunks.append(int(rng.integers(0, 500)) + np.cumsum(d))
+    docs = np.concatenate(chunks).astype(np.int64)
+    packed = pack_docs(docs, blk_start, blk_len)
+    imps = rng.integers(1, 256, size=docs.shape[0]).astype(np.int32)
+    return docs, imps, blk_start, blk_len, packed
+
+
+def _select(packed, blk_start, blk_len, sel):
+    """Per-query directory columns for the selected blocks (engine layout)."""
+    return dict(
+        starts=jnp.asarray(blk_start[sel], jnp.int32),
+        lens=jnp.asarray(blk_len[sel], jnp.int32),
+        pack_dir=jnp.asarray(pack_dir_entries(packed)[sel], jnp.int32),
+        pack_firsts=jnp.asarray(packed.blk_first[sel], jnp.int32),
+    )
+
+
+@pytest.mark.parametrize("seed", [0, 3, 9])
+def test_pallas_packed_decode_matches_oracle_across_widths(seed):
+    """Kernel decode == pure-jnp oracle for every width in one dispatch."""
+    rng = np.random.default_rng(seed)
+    _, imps, blk_start, blk_len, packed = _packed_pool(rng, 24)
+    assert {0, 4, 8, 16, 32} <= set(packed.blk_width.tolist())
+    sel = rng.integers(0, 24, size=17)  # duplicates allowed, like a query
+    cols = _select(packed, blk_start, blk_len, sel)
+    keep = jnp.asarray(rng.random(17) < 0.8)
+    words = jnp.asarray(packed.words)
+    r0 = jnp.int32(int(rng.integers(0, 100)))
+    oracle_local, _ = ref.gather_block_postings_packed(
+        words, jnp.asarray(imps), cols["starts"], cols["lens"],
+        cols["pack_dir"], cols["pack_firsts"], keep, r0,
+    )
+    got = unpack_locals_pallas(
+        words, cols["starts"], cols["lens"],
+        cols["pack_dir"], cols["pack_firsts"], keep, r0,
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(oracle_local))
+
+
+def test_pallas_packed_decode_pruned_and_padding_rows():
+    """keep=False rows and starts==-1 padding rows decode to all -1."""
+    rng = np.random.default_rng(5)
+    _, imps, blk_start, blk_len, packed = _packed_pool(rng, 8)
+    sel = np.arange(8)
+    cols = _select(packed, blk_start, blk_len, sel)
+    # Engine-style padding rows: starts == -1, directory columns carry the
+    # clamped gather of a real block (index 0), exactly what safe_ids does.
+    starts = jnp.concatenate([cols["starts"], jnp.asarray([-1, -1], jnp.int32)])
+    pad = lambda c: jnp.concatenate([c, c[:1], c[:1]])
+    lens = pad(cols["lens"])
+    pd, pf = pad(cols["pack_dir"]), pad(cols["pack_firsts"])
+    words = jnp.asarray(packed.words)
+    r0 = jnp.int32(0)
+
+    all_pruned = jnp.zeros(10, bool)
+    got = unpack_locals_pallas(words, starts, lens, pd, pf, all_pruned, r0)
+    assert np.all(np.asarray(got) == -1)
+
+    keep = jnp.ones(10, bool)
+    got = unpack_locals_pallas(words, starts, lens, pd, pf, keep, r0)
+    oracle_local, _ = ref.gather_block_postings_packed(
+        words, jnp.asarray(imps), starts, lens, pd, pf, keep, r0
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(oracle_local))
+    assert np.all(np.asarray(got).reshape(10, ref.BLOCK)[8:] == -1)
+
+
+def test_score_blocks_packed_parity_straddling_width_change():
+    """One scored range spanning a width change: all three paths agree."""
+    rng = np.random.default_rng(11)
+    # Narrow deltas only so every docid stays inside a modest accumulator.
+    docs, imps, blk_start, blk_len, packed = _packed_pool(
+        rng, 12, max_deltas=(0, 1, 7)
+    )
+    assert len(set(packed.blk_width.tolist())) >= 2  # widths change mid-range
+    s_pad = int(docs.max()) + 1
+    sel = np.arange(12)
+    cols = _select(packed, blk_start, blk_len, sel)
+    keep = jnp.asarray(rng.random(12) < 0.9)
+    words = jnp.asarray(packed.words)
+    pk = dict(
+        pack_words=words, pack_dir=cols["pack_dir"],
+        pack_firsts=cols["pack_firsts"],
+    )
+    for r0 in (0, 3):
+        base = score_blocks(
+            jnp.asarray(docs, jnp.int32), jnp.asarray(imps), cols["starts"],
+            cols["lens"], keep, jnp.int32(r0), s_pad=s_pad, impl="xla",
+        )
+        for impl in ("xla", "pallas"):
+            got = score_blocks(
+                jnp.zeros((1,), jnp.int32), jnp.asarray(imps), cols["starts"],
+                cols["lens"], keep, jnp.int32(r0), s_pad=s_pad, impl=impl,
+                docs_format="packed", **pk,
+            )
+            np.testing.assert_array_equal(
+                np.asarray(got), np.asarray(base), err_msg=f"{impl} r0={r0}"
+            )
+
+
+def test_score_blocks_packed_requires_directory():
+    with pytest.raises(ValueError, match="pack_"):
+        score_blocks(
+            jnp.zeros((1,), jnp.int32), jnp.zeros((1,), jnp.int32),
+            jnp.zeros((1,), jnp.int32), jnp.ones((1,), jnp.int32),
+            jnp.ones((1,), bool), jnp.int32(0), s_pad=128,
+            docs_format="packed",
+        )
 
 
 @settings(max_examples=25, deadline=None)

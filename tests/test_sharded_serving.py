@@ -19,6 +19,7 @@ import sys
 
 import numpy as np
 import pytest
+from differential import assert_sharded_matches_engine
 
 from repro.core.clustered_index import (
     BLOCK,
@@ -126,15 +127,9 @@ def test_sharded_matches_single_device_bitwise(n_shards, safe_stop):
     """Exhaustive budgets: merged shard heaps == single-device top-k, bitwise."""
     _, eng, queries = _small_setup(seed=7, n_ranges=6)
     se = ShardedEngine(eng, n_shards, use_mesh=False)
-    for q in queries:
-        plan = eng.plan(q)
-        single = eng.traverse(plan, safe_stop=safe_stop)
-        sids, svals = eng.topk_docs(single.state)
-        sh = se.traverse(plan, safe_stop=safe_stop)
-        assert sh.doc_ids.tolist() == sids.tolist()
-        assert sh.scores.tolist() == svals.tolist()
-        assert sh.exact and sh.fidelity_bound == 0
-        assert all(r in ("safe", "exhausted") for r in sh.shard_exit_reasons)
+    assert_sharded_matches_engine(
+        se, [eng.plan(q) for q in queries], safe_stop=safe_stop
+    )
 
 
 def test_sharded_batch_engine_parity_across_buckets():
@@ -158,12 +153,7 @@ def test_sharded_batch_engine_parity_across_buckets():
 def test_single_shard_reduces_to_engine():
     _, eng, queries = _small_setup(seed=13, n_ranges=4)
     se = ShardedEngine(eng, 1, use_mesh=False)
-    for q in queries[:4]:
-        plan = eng.plan(q)
-        sids, svals = eng.topk_docs(eng.traverse(plan).state)
-        sh = se.traverse(plan)
-        assert sh.doc_ids.tolist() == sids.tolist()
-        assert sh.scores.tolist() == svals.tolist()
+    assert_sharded_matches_engine(se, [eng.plan(q) for q in queries[:4]])
 
 
 # ------------------------------------------------- budgets and exit reasons
