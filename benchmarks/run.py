@@ -6,7 +6,9 @@ where latency is meaningful, and ``derived`` carries the headline claim
 metric. Full rows land in benchmarks/results/*.json for EXPERIMENTS.md,
 and the per-run headline summary lands in a top-level ``BENCH_<id>.json``
 (id = ``$BENCH_ID``, else the git short sha, else a timestamp) — the
-perf-trajectory artifact CI uploads per commit.
+perf-trajectory artifact CI uploads per commit. Because that artifact is
+gitignored and expires with CI retention, every run also appends a compact
+record to the git-tracked ``benchmarks/trajectory.jsonl``.
 """
 
 from __future__ import annotations
@@ -174,11 +176,14 @@ def _bench_id() -> str:
     if env:
         return env
     try:
-        sha = subprocess.run(
+        proc = subprocess.run(
             ["git", "rev-parse", "--short", "HEAD"],
             capture_output=True, text=True, timeout=10,
             cwd=os.path.dirname(os.path.abspath(__file__)),
-        ).stdout.strip()
+        )
+        # A nonzero exit (not a repo, detached worktree garbage) can still
+        # print to stdout under some git versions — never trust it then.
+        sha = proc.stdout.strip() if proc.returncode == 0 else ""
         if sha:
             return sha
     except (OSError, subprocess.SubprocessError):
@@ -186,21 +191,61 @@ def _bench_id() -> str:
     return time.strftime("%Y%m%d-%H%M%S")
 
 
-def write_headline_file(headlines: dict, failures: list) -> str:
+TRAJECTORY = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "trajectory.jsonl")
+
+
+def append_trajectory(rid: str, headlines: dict, failures: list) -> str:
+    """Append one compact run record to the git-tracked trajectory log.
+
+    ``BENCH_<id>.json`` is gitignored and CI only keeps it as an expiring
+    artifact, which is why seven PRs of bench runs accumulated nothing.
+    This JSONL file is tracked: every run (CI small presets included)
+    appends one line — id, time, and the headline string per benchmark,
+    no bulky per-row payloads — so the perf trajectory survives in-repo.
+    A run with the same id (re-run of one commit) replaces its entry.
+    """
+    entry = {
+        "id": rid,
+        "unix_time": int(time.time()),
+        "small": bool(os.environ.get("REPRO_BENCH_SMALL")),
+        "headlines": {
+            name: h["derived"] for name, h in sorted(headlines.items())
+        },
+        "us_per_call": {
+            name: h["us_per_call"] for name, h in sorted(headlines.items())
+        },
+        "failures": failures,
+    }
+    lines = []
+    if os.path.exists(TRAJECTORY):
+        with open(TRAJECTORY, encoding="utf-8") as f:
+            lines = [ln for ln in f.read().splitlines() if ln.strip()]
+        lines = [ln for ln in lines if json.loads(ln).get("id") != rid]
+    lines.append(json.dumps(entry, sort_keys=True))
+    with open(TRAJECTORY, "w", encoding="utf-8") as f:
+        f.write("\n".join(lines) + "\n")
+    return TRAJECTORY
+
+
+def write_headline_file(
+    headlines: dict, failures: list, metrics: dict | None = None
+) -> str:
     """Write the top-level BENCH_<id>.json perf-trajectory snapshot."""
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     rid = _bench_id()
     path = os.path.join(root, f"BENCH_{rid}.json")
+    payload = {
+        "id": rid,
+        "unix_time": int(time.time()),
+        "headlines": headlines,
+        "failures": failures,
+    }
+    if metrics:
+        payload["metrics"] = metrics
     with open(path, "w", encoding="utf-8") as f:
-        json.dump(
-            {
-                "id": rid,
-                "unix_time": int(time.time()),
-                "headlines": headlines,
-                "failures": failures,
-            },
-            f, indent=1, sort_keys=True,
-        )
+        json.dump(payload, f, indent=1, sort_keys=True)
+    append_trajectory(rid, headlines, failures)
     return path
 
 
@@ -211,6 +256,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     failures = []
     headlines = {}
+    metrics = {}
     for name, module in MODULES:
         if only and not any(o in name for o in only):
             continue
@@ -221,13 +267,19 @@ def main() -> None:
             us, derived = _headline(name, rows)
             print(f"{name},{us:.1f},{derived}", flush=True)
             headlines[name] = {"us_per_call": round(us, 1), "derived": derived}
+            # Bench modules that instrument a run export an OBS_SNAPSHOT
+            # (metrics-registry dump + derived numbers); fold it into the
+            # BENCH_<id>.json so overhead claims ship with the run record.
+            snap = getattr(mod, "OBS_SNAPSHOT", None)
+            if snap:
+                metrics[name] = snap
         except Exception as e:  # noqa: BLE001
             traceback.print_exc()
             print(f"{name},nan,FAILED:{type(e).__name__}", flush=True)
             failures.append(name)
         sys.stderr.write(f"# {name} took {time.time()-t0:.1f}s\n")
     if headlines or failures:
-        path = write_headline_file(headlines, failures)
+        path = write_headline_file(headlines, failures, metrics)
         sys.stderr.write(f"# headline trajectory -> {path}\n")
     if failures:
         sys.exit(1)

@@ -27,12 +27,14 @@ Two engines over the same cluster-skipping index:
     two modes' P99s compare directly.
 
 All report percentile latencies, queries/sec, SLA compliance, and
-effectiveness (RBO vs exhaustive).
+effectiveness (RBO vs exhaustive). ``--trace out.jsonl`` records a
+per-query trace (any mode, sample rate 1.0, DESIGN.md §13) for
+``python -m repro.obs report out.jsonl``.
 
     PYTHONPATH=src python examples/serve_anytime.py
         [--mode host|batch|sharded|control|inflight] [--sla-ms 15]
         [--queries 300] [--batch-size 16] [--quantum 1] [--shards 2]
-        [--replicas 1]
+        [--replicas 1] [--trace out.jsonl]
 """
 
 import argparse
@@ -45,6 +47,7 @@ from repro.core.anytime import Reactive, run_query_anytime
 from repro.core.metrics import rbo
 from repro.core.oracle import exhaustive_topk
 from repro.data.synth import make_corpus, make_query_log
+from repro.obs import NOOP, Instrumentation
 from repro.serving import (
     BatchEngine,
     BucketSpec,
@@ -91,7 +94,7 @@ def report(times, quality, sla, wall, n, extra=""):
     print("  P99 SLA", "MET" if np.percentile(t, 99) <= sla else "MISSED")
 
 
-def serve_host(engine, log, sla_arg, oracle, exh_p99):
+def serve_host(engine, log, sla_arg, oracle, exh_p99, obs=NOOP):
     # Default SLA: 25% of this machine's host-driven exhaustive P99.
     sla = sla_arg or exh_p99 * 0.25
     print(f"SLA: P99 <= {sla:.2f} ms (exhaustive P99 was {exh_p99:.2f} ms)")
@@ -100,8 +103,17 @@ def serve_host(engine, log, sla_arg, oracle, exh_p99):
     t0 = time.perf_counter()
     for i in range(log.n_queries):
         plan = engine.plan(log.terms[i])
+        t_q = obs.clock() if obs.enabled else 0.0
         res = run_query_anytime(engine, plan, policy=policy, budget_ms=sla)
         times.append(res.elapsed_ms)
+        if obs.enabled:
+            # The host loop has no server in front of it, so it emits the
+            # one-span trace itself (queue wait is zero by construction).
+            obs.trace_begin(i)
+            obs.trace_span(i, "service", t_q, obs.clock())
+            obs.trace_attr(i, server="host", latency_ms=res.elapsed_ms,
+                           exit_reason=res.exit_reason, sla_ms=sla)
+            obs.trace_end(i)
         if i in oracle:
             quality.append(rbo(res.doc_ids.tolist(), oracle[i], phi=0.8))
     wall = time.perf_counter() - t0
@@ -110,10 +122,10 @@ def serve_host(engine, log, sla_arg, oracle, exh_p99):
 
 
 def serve_batch(engine, log, sla_arg, oracle, batch_size, rate0, exh_p99,
-                n_shards=None):
+                n_shards=None, obs=NOOP):
     spec = BucketSpec(max_batch=batch_size)
     if n_shards:
-        seng = ShardedEngine(engine, n_shards)
+        seng = ShardedEngine(engine, n_shards, obs=obs)
         beng = ShardedBatchEngine(seng, spec)
         path = "shard_map mesh" if seng.mesh is not None else "vmap (1 device)"
         print(f"sharded: {seng.n_shards} range shards, {path}, "
@@ -144,9 +156,10 @@ def serve_batch(engine, log, sla_arg, oracle, batch_size, rate0, exh_p99,
           f"{exh_p99:.2f} ms)")
 
     budgeter = mk_budgeter(
-        sla_ms=sla, policy=Reactive(alpha=1.0, beta=1.5, q=0.01), rate=rate0
+        sla_ms=sla, policy=Reactive(alpha=1.0, beta=1.5, q=0.01), rate=rate0,
+        obs=obs,
     )
-    server = MicroBatchServer(beng, budgeter, max_batch=batch_size)
+    server = MicroBatchServer(beng, budgeter, max_batch=batch_size, obs=obs)
     # Let the budgeter see one real batch before timing; remember the rid
     # watermark so the timed replay's rids map back to query-log positions.
     server.replay([log.terms[i] for i in range(min(batch_size, log.n_queries))])
@@ -170,7 +183,8 @@ def serve_batch(engine, log, sla_arg, oracle, batch_size, rate0, exh_p99,
                   f"final alpha = {budgeter.policy.alpha:.2f}"))
 
 
-def serve_inflight(engine, log, sla_arg, oracle, args, rate0, exh_p99):
+def serve_inflight(engine, log, sla_arg, oracle, args, rate0, exh_p99,
+                   obs=NOOP):
     """Slot-swapping continuous loop at saturating offered load."""
     spec = BucketSpec(max_batch=args.batch_size)
     beng = BatchEngine(engine, spec)
@@ -189,10 +203,11 @@ def serve_inflight(engine, log, sla_arg, oracle, args, rate0, exh_p99):
           f"{exh_p99:.2f} ms)")
 
     budgeter = SlaBudgeter(
-        sla_ms=sla, policy=Reactive(alpha=1.0, beta=1.5, q=0.01), rate=rate0
+        sla_ms=sla, policy=Reactive(alpha=1.0, beta=1.5, q=0.01), rate=rate0,
+        obs=obs,
     )
     server = InflightServer(
-        beng, budgeter, n_slots=args.batch_size, quantum=args.quantum
+        beng, budgeter, n_slots=args.batch_size, quantum=args.quantum, obs=obs
     )
     times, quality = [], []
     t0 = time.perf_counter()
@@ -210,7 +225,7 @@ def serve_inflight(engine, log, sla_arg, oracle, args, rate0, exh_p99):
                   f"final alpha = {budgeter.policy.alpha:.2f}"))
 
 
-def serve_control(engine, log, sla_arg, oracle, args):
+def serve_control(engine, log, sla_arg, oracle, args, obs=NOOP):
     """Control-plane demo: outage + recovery + live reshard, one stream."""
     from repro.control import ControlPlane
 
@@ -218,6 +233,7 @@ def serve_control(engine, log, sla_arg, oracle, args):
         engine, n_shards=args.shards, n_replicas=args.replicas,
         sla_ms=sla_arg or float("inf"),
         spec=BucketSpec(max_batch=args.batch_size),
+        obs=obs,
     )
     st = plane.stats()
     print(f"control plane: {args.shards} shards x {args.replicas} replicas, "
@@ -304,20 +320,31 @@ def main():
     ap.add_argument("--queries", type=int, default=300)
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--batch-size", type=int, default=16)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record a per-query JSONL trace (sample rate 1.0) "
+                         "for `python -m repro.obs report PATH`")
     args = ap.parse_args()
 
+    obs = (Instrumentation.make(sample_rate=1.0, trace_path=args.trace)
+           if args.trace else NOOP)
     _, log, index, engine = build(args)
     exh_p99, oracle, rate0 = calibrate(engine, index, log, args)
     if args.mode == "host":
-        serve_host(engine, log, args.sla_ms, oracle, exh_p99)
+        serve_host(engine, log, args.sla_ms, oracle, exh_p99, obs=obs)
     elif args.mode == "control":
-        serve_control(engine, log, args.sla_ms, oracle, args)
+        serve_control(engine, log, args.sla_ms, oracle, args, obs=obs)
     elif args.mode == "inflight":
-        serve_inflight(engine, log, args.sla_ms, oracle, args, rate0, exh_p99)
+        serve_inflight(engine, log, args.sla_ms, oracle, args, rate0, exh_p99,
+                       obs=obs)
     else:
         serve_batch(engine, log, args.sla_ms, oracle, args.batch_size,
                     rate0, exh_p99,
-                    n_shards=args.shards if args.mode == "sharded" else None)
+                    n_shards=args.shards if args.mode == "sharded" else None,
+                    obs=obs)
+    if obs.enabled:
+        obs.close()
+        print(f"\ntrace: {obs.tracer.finished} records -> {args.trace}  "
+              f"(summarize: python -m repro.obs report {args.trace})")
 
 
 if __name__ == "__main__":

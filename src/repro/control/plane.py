@@ -35,7 +35,6 @@ cooperating behaviours:
 from __future__ import annotations
 
 import os
-import time
 
 import numpy as np
 
@@ -45,6 +44,7 @@ from repro.control.replica import ReplicaGroupEngine
 from repro.control.reshard import ReshardPlanner, ReshardTask
 from repro.core.clustered_index import range_postings_mass, shard_device_index
 from repro.core.range_daat import Engine
+from repro.obs import NOOP
 from repro.serving.bucketing import BucketSpec
 from repro.serving.microbatch import MicroBatchServer, ShardedSlaBudgeter
 from repro.serving.sharded import ShardedBatchEngine, ShardedEngine
@@ -89,20 +89,24 @@ class ControlPlane:
         reshard_trigger: float = 1.25,
         budgeter: ShardedSlaBudgeter | None = None,
         max_batch: int | None = None,
-        clock=time.perf_counter,
+        clock=None,
         journal: TopologyJournal | None = None,
+        obs=NOOP,
     ):
         self.engine = engine
         self.n_replicas = n_replicas
         self.spec = spec or BucketSpec()
         self._use_mesh = use_mesh
+        self.obs = obs
+        self.clock = clock if clock is not None else obs.clock
         self.health = HealthLedger(n_shards, n_replicas)
-        self._install(ShardedEngine(engine, n_shards, use_mesh=use_mesh))
+        self._install(ShardedEngine(engine, n_shards, use_mesh=use_mesh, obs=obs))
         self.budgeter = budgeter or ShardedSlaBudgeter(
             sla_ms=sla_ms,
             n_shards=n_shards,
             mode=budget_mode,
             shard_mass=self._shard_mass,
+            obs=obs,
         )
         if getattr(self.budgeter, "down_mask", False) is None:
             # Base-API `observe` feedback must not credit postings to
@@ -120,7 +124,10 @@ class ControlPlane:
         self.batches_served = 0
         self.queries_served = 0
         self.queries_served_during_reshard = 0
-        self.server = _PlaneServer(self, max_batch=max_batch, clock=clock)
+        self._reshard_t0: float | None = None
+        self.server = _PlaneServer(
+            self, max_batch=max_batch, clock=self.clock, obs=obs
+        )
         # Topology journal (DESIGN.md §10): records are stamped with the
         # served index's fingerprint so replay can refuse a foreign journal.
         # The fingerprint (a sha1 pass over the postings arrays) is computed
@@ -307,6 +314,7 @@ class ControlPlane:
                     int(cuts.shape[0] - 1),
                     use_mesh=self._use_mesh,
                     shards=shard_device_index(self.engine.index, cuts=cuts),
+                    obs=self.obs,
                 ),
                 cuts,
             )
@@ -335,6 +343,8 @@ class ControlPlane:
     # ------------------------------------------------------------- failover
     def mark_down(self, shard: int, replica: int | None = None) -> None:
         self.health.mark_down(shard, replica)
+        if self.obs.enabled:
+            self.obs.count("health_transitions", event="down", shard=shard)
         self._journal_append(
             {"kind": "health", "event": "down", "shard": int(shard),
              "replica": None if replica is None else int(replica)}
@@ -342,6 +352,8 @@ class ControlPlane:
 
     def mark_up(self, shard: int, replica: int | None = None) -> None:
         self.health.mark_up(shard, replica)
+        if self.obs.enabled:
+            self.obs.count("health_transitions", event="up", shard=shard)
         self._journal_append(
             {"kind": "health", "event": "up", "shard": int(shard),
              "replica": None if replica is None else int(replica)}
@@ -453,6 +465,7 @@ class ControlPlane:
                 len(new_shards),
                 use_mesh=self._use_mesh,
                 shards=new_shards,
+                obs=self.obs,
             )
             beng = ShardedBatchEngine(
                 ReplicaGroupEngine(seng, self.n_replicas, use_mesh=self._use_mesh)
@@ -463,6 +476,9 @@ class ControlPlane:
             return seng, beng
 
         self.reshard_task = ReshardTask(source, cuts, build, warm_widths)
+        if self.obs.enabled:
+            self._reshard_t0 = self.clock()
+            self.obs.count("reshard_started")
         return self.reshard_task
 
     def _cutover(self) -> None:
@@ -489,6 +505,15 @@ class ControlPlane:
         self.planner.committed(task.cuts)
         self.reshard_task = None
         self.reshards_completed += 1
+        if self.obs.enabled:
+            self.obs.count("reshard_cutovers")
+            if self._reshard_t0 is not None:
+                # Arm -> cutover wall time: how long serving carried the
+                # staged successor before the pointer swap.
+                self.obs.observe(
+                    "reshard_ms", (self.clock() - self._reshard_t0) * 1e3
+                )
+                self._reshard_t0 = None
         self._journal_append(
             {"kind": "reshard", "cuts": [int(c) for c in task.cuts]}
         )

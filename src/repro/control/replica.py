@@ -129,6 +129,9 @@ class ReplicaGroupEngine:
             jnp.asarray(maxr, jnp.int32),
         )
         self.dispatches += 1
+        if self.obs.enabled:  # delegates to the wrapped engine's handle
+            self.obs.count("replica_dispatches")
+            self.obs.observe("replica_pad_lanes", pad)
         if pad:
             out = tuple(np.asarray(x)[:n] for x in out)
         return out

@@ -629,7 +629,11 @@ class Engine:
         interpret: bool = True,
         impact_dtype: str = "int32",
         docs_format: str = "int32",
+        obs=None,
     ):
+        from repro.obs import NOOP  # local: obs is import-cycle-free by design
+
+        self.obs = obs if obs is not None else NOOP
         self.index = index
         self.k = k
         self.ordering = ordering
@@ -770,7 +774,7 @@ class Engine:
         prune_blocks: bool = True,
     ) -> TraverseResult:
         """Device-driven whole-query traversal."""
-        return device_traverse(
+        res = device_traverse(
             self.dix,
             plan.blk_tab,
             plan.rest_tab,
@@ -786,6 +790,15 @@ class Engine:
             interpret=self.interpret,
             docs_format=self.docs_format,
         )
+        if self.obs.enabled:
+            # Reading the exit flags forces a device sync; instrumentation
+            # is allowed to cost time, never to change results.
+            self.obs.count(
+                "engine_queries",
+                reason=exit_reason(bool(res.exit_safe), bool(res.exit_budget)),
+            )
+            self.obs.observe("engine_postings", int(res.state.postings))
+        return res
 
     # ----------------------------------------------------------------- util
     def topk_docs(self, state: TopKState):

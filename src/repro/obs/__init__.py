@@ -1,0 +1,41 @@
+"""Observability substrate: metrics, per-query traces, exposition.
+
+``repro.obs`` deliberately imports nothing from the rest of ``repro`` —
+any layer (core engine through control plane) can depend on it without
+cycles. The one object most callers need is ``Instrumentation`` (or the
+shared ``NOOP`` default); see DESIGN.md §13.
+"""
+
+from repro.obs.clock import DEFAULT_CLOCK, FakeClock
+from repro.obs.export import json_snapshot, prometheus_text
+from repro.obs.instrument import NOOP, Instrumentation, NoopInstrumentation
+from repro.obs.metrics import (
+    N_BUCKETS,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+)
+from repro.obs.report import render, summarize
+from repro.obs.trace import QueryTrace, Tracer, TraceSink, read_traces
+
+__all__ = [
+    "DEFAULT_CLOCK",
+    "FakeClock",
+    "Instrumentation",
+    "NoopInstrumentation",
+    "NOOP",
+    "MetricsRegistry",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "N_BUCKETS",
+    "Tracer",
+    "TraceSink",
+    "QueryTrace",
+    "read_traces",
+    "prometheus_text",
+    "json_snapshot",
+    "summarize",
+    "render",
+]

@@ -1,0 +1,45 @@
+"""CLI: ``python -m repro.obs report <trace.jsonl> [--sla-ms X] [--json]``."""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.obs.report import render, summarize
+from repro.obs.trace import read_traces
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.obs")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    rp = sub.add_parser("report", help="summarize a JSONL query trace")
+    rp.add_argument("trace", help="path to a TraceSink JSONL file")
+    rp.add_argument(
+        "--sla-ms",
+        type=float,
+        default=None,
+        help="override the per-record SLA for compliance accounting",
+    )
+    rp.add_argument(
+        "--json", action="store_true", help="emit the summary as JSON"
+    )
+    args = ap.parse_args(argv)
+
+    records = read_traces(args.trace)
+    if not records:
+        print(f"{args.trace}: no trace records", file=sys.stderr)
+        return 1
+    summary = summarize(records, sla_ms=args.sla_ms)
+    if args.json:
+        print(json.dumps(summary, indent=2, sort_keys=True))
+    else:
+        print(render(summary))
+    return 0
+
+
+if __name__ == "__main__":
+    try:
+        raise SystemExit(main())
+    except BrokenPipeError:  # e.g. `... report t.jsonl | head`
+        raise SystemExit(0)

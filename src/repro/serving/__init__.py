@@ -17,6 +17,7 @@ from repro.serving.microbatch import (  # noqa: F401
     ServedQuery,
     ShardedSlaBudgeter,
     SlaBudgeter,
+    result_exit_reason,
 )
 from repro.serving.sharded import (  # noqa: F401
     ShardedBatchEngine,

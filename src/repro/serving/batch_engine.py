@@ -102,9 +102,14 @@ class BatchEngine:
     requested — tests use it to assert the recompile bound holds.
     """
 
-    def __init__(self, engine: Engine, spec: BucketSpec | None = None):
+    def __init__(
+        self, engine: Engine, spec: BucketSpec | None = None, obs=None
+    ):
+        from repro.obs import NOOP
+
         self.engine = engine
         self.spec = spec or BucketSpec()
+        self.obs = obs if obs is not None else NOOP
         self.compiled_shapes: set[tuple[int, int]] = set()
         self.batches_run = 0
 
@@ -213,6 +218,13 @@ class BatchEngine:
             results[qi] = lane_result(
                 vals, ids, postings, blocks, ranges, safe, budg, lane
             )
+        if self.obs.enabled:
+            self.obs.observe("batch_engine_chunk_lanes", len(chunk_idx))
+            for lane in range(len(chunk_idx)):
+                self.obs.count(
+                    "batch_engine_queries",
+                    reason=exit_reason(bool(safe[lane]), bool(budg[lane])),
+                )
 
     # ---------------------------------------------------------------- misc
     def warmup(self, widths: Sequence[int] | None = None) -> None:

@@ -37,7 +37,6 @@ queue-aware feedback applies unchanged here.
 
 from __future__ import annotations
 
-import time
 from collections import deque
 from typing import Sequence
 
@@ -57,8 +56,9 @@ from repro.serving.batch_engine import (
     BatchEngine,
     lane_result,
 )
+from repro.obs import NOOP
 from repro.serving.bucketing import DoubleBuffer
-from repro.serving.microbatch import ServedQuery, SlaBudgeter
+from repro.serving.microbatch import ServedQuery, SlaBudgeter, result_exit_reason
 
 __all__ = ["InflightServer"]
 
@@ -97,7 +97,8 @@ class InflightServer:
         budgeter: SlaBudgeter,
         n_slots: int = 8,
         quantum: int = 1,
-        clock=time.perf_counter,
+        clock=None,
+        obs=NOOP,
     ):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
@@ -108,7 +109,10 @@ class InflightServer:
         self.budgeter = budgeter
         self.n_slots = int(n_slots)
         self.quantum = int(quantum)
-        self.clock = clock
+        self.obs = obs
+        # Same clock-resolution rule as MicroBatchServer: explicit wins,
+        # else the instrumentation handle's (wall clock on NOOP).
+        self.clock = clock if clock is not None else obs.clock
         self.n_ranges = int(self.engine.index.n_ranges)
 
         self.buffers = DoubleBuffer(
@@ -119,6 +123,7 @@ class InflightServer:
 
         self.slot_rid = np.full(self.n_slots, -1, dtype=np.int64)
         self.slot_t_enq = np.zeros(self.n_slots, dtype=np.float64)
+        self.slot_t_adm = np.zeros(self.n_slots, dtype=np.float64)
         self.slot_quanta = np.zeros(self.n_slots, dtype=np.int64)
         self._prev_postings = np.zeros(self.n_slots, dtype=np.int64)
 
@@ -135,6 +140,9 @@ class InflightServer:
         rid = self._next_rid
         self._next_rid += 1
         self._queue.append((rid, np.asarray(q_terms), self.clock()))
+        if self.obs.enabled:
+            self.obs.count("submitted", server="inflight")
+            self.obs.trace_begin(rid)
         return rid
 
     @property
@@ -180,15 +188,21 @@ class InflightServer:
             # Width growth is the only program-shape change; the pow2
             # ladder bounds how many (n_slots, width) compiles can occur.
             self.buffers.grow_width(width)
-        self.buffers.back.write_lane(
-            lane, plan, budget=self._admission_budget(plan)
-        )
+        budget = self._admission_budget(plan)
+        self.buffers.back.write_lane(lane, plan, budget=budget)
         self._reset_carry_lane(lane, parked=False)
         self.slot_rid[lane] = rid
         self.slot_t_enq[lane] = t_enq
         self.slot_quanta[lane] = 0
         self._prev_postings[lane] = 0
         self.admissions += 1
+        if self.obs.enabled:
+            now = self.clock()
+            self.slot_t_adm[lane] = now
+            self.obs.count("admissions", server="inflight")
+            self.obs.observe("budget_postings", budget, server="inflight")
+            self.obs.trace_span(rid, "queue", t_enq, now)
+            self.obs.trace_attr(rid, budget_postings=budget, slot=lane)
 
     def _park(self, lane: int) -> None:
         self.buffers.back.clear_lane(lane)
@@ -196,6 +210,8 @@ class InflightServer:
         self.slot_rid[lane] = -1
         self.slot_quanta[lane] = 0
         self._prev_postings[lane] = 0
+        if self.obs.enabled:
+            self.obs.count("parks", server="inflight")
 
     def _admit_vacant(self) -> None:
         for lane in np.nonzero(self.slot_rid < 0)[0]:
@@ -251,31 +267,66 @@ class InflightServer:
         self._prev_postings[active] = postings[active]
         self.slot_quanta[active] += 1
 
+        obs = self.obs
+        if obs.enabled:
+            obs.observe("step_ms", step_ms, server="inflight")
+            obs.observe("active_lanes", int(active.sum()), server="inflight")
+            obs.gauge(
+                "slot_occupancy", float(active.sum()) / self.n_slots,
+                server="inflight",
+            )
+            for lane in np.nonzero(active)[0]:
+                # Device-step attribution: the quantum's host-observed wall
+                # time, shared by every lane riding this dispatch.
+                obs.trace_span(
+                    int(self.slot_rid[lane]), "dispatch", t0, t1,
+                    device_ms=round(step_ms, 4), step=self.steps_run,
+                )
+
         served: list[ServedQuery] = []
         done = carry_done(self.carry, self.n_ranges) & active
         vals = self.carry.state.vals
         ids = self.carry.state.ids
         blocks = self.carry.state.blocks
+        sla = getattr(self.budgeter, "sla_ms", None)
         for lane in np.nonzero(done)[0]:
             lane = int(lane)
-            served.append(
-                ServedQuery(
-                    rid=int(self.slot_rid[lane]),
-                    result=lane_result(
-                        vals,
-                        ids,
-                        postings,
-                        blocks,
-                        self.carry.i,
-                        self.carry.exit_safe,
-                        self.carry.exit_budget,
-                        lane,
-                    ),
-                    latency_ms=(t1 - self.slot_t_enq[lane]) * 1e3,
-                    batch_size=self.n_slots,
-                    quanta=int(self.slot_quanta[lane]),
-                )
+            sq = ServedQuery(
+                rid=int(self.slot_rid[lane]),
+                result=lane_result(
+                    vals,
+                    ids,
+                    postings,
+                    blocks,
+                    self.carry.i,
+                    self.carry.exit_safe,
+                    self.carry.exit_budget,
+                    lane,
+                ),
+                latency_ms=(t1 - self.slot_t_enq[lane]) * 1e3,
+                batch_size=self.n_slots,
+                quanta=int(self.slot_quanta[lane]),
             )
+            served.append(sq)
+            if obs.enabled:
+                reason = result_exit_reason(sq.result)
+                obs.count("served_queries", server="inflight", reason=reason)
+                obs.observe("latency_ms", sq.latency_ms, server="inflight")
+                obs.observe("quanta", sq.quanta, server="inflight")
+                obs.trace_span(
+                    sq.rid, "service", float(self.slot_t_adm[lane]), t1,
+                    quanta=sq.quanta,
+                )
+                attrs = dict(
+                    server="inflight",
+                    latency_ms=round(sq.latency_ms, 4),
+                    exit_reason=reason,
+                    quanta=sq.quanta,
+                )
+                if sla is not None and sla != float("inf"):
+                    attrs["sla_ms"] = float(sla)
+                obs.trace_attr(sq.rid, **attrs)
+                obs.trace_end(sq.rid)
             self._park(lane)
 
         # Rate EWMA from device step time; Eq. (7) from end-to-end latency

@@ -21,13 +21,13 @@ attribute the batch wall time plus queue wait to every member.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Sequence
 
 import numpy as np
 
 from repro.core.anytime import Reactive
 from repro.core.clustered_index import BLOCK
+from repro.obs import NOOP
 from repro.serving.batch_engine import BatchEngine, BatchResult
 
 __all__ = ["SlaBudgeter", "ShardedSlaBudgeter", "ServedQuery", "MicroBatchServer"]
@@ -42,6 +42,7 @@ class SlaBudgeter:
     rate: float = 100.0  # postings / ms / lane — EWMA, seeded conservatively
     ema: float = 0.3
     floor: int = BLOCK  # always admit at least one block per query
+    obs: object = NOOP  # Instrumentation handle (alpha/rate/cap trajectories)
 
     def budgets(self, n: int, plans=None) -> np.ndarray:
         """[n] int32 postings budgets for the next batch.
@@ -52,6 +53,9 @@ class SlaBudgeter:
         """
         cap = max(float(self.floor), self.rate * self.sla_ms / self.policy.alpha)
         cap = min(cap, float(2**31 - 1))  # inf SLA -> unbounded traversal
+        if self.obs.enabled:
+            self.obs.gauge("budgeter_alpha", float(self.policy.alpha))
+            self.obs.gauge("budgeter_cap_postings", float(int(cap)))
         return np.full(n, int(cap), dtype=np.int32)
 
     def observe(
@@ -73,16 +77,27 @@ class SlaBudgeter:
         if elapsed_ms > 0 and n > 0:
             lane_rate = (total_postings / n) / elapsed_ms
             self.rate = (1 - self.ema) * self.rate + self.ema * max(lane_rate, 1e-6)
+            if self.obs.enabled:
+                self.obs.gauge("budgeter_rate", float(self.rate))
         self._feed_policy(elapsed_ms, latencies_ms)
 
     def _feed_policy(
         self, elapsed_ms: float, latencies_ms: Sequence[float] | None
     ) -> None:
+        # Eq. (7) inputs: every (latency, SLA) pair the policy judges is
+        # also recorded, so the alpha trajectory in the metrics can be
+        # replayed against exactly what drove it.
         if latencies_ms is None:
             self.policy.on_query_end(elapsed_ms, self.sla_ms)
+            if self.obs.enabled:
+                self.obs.observe("budgeter_feedback_ms", float(elapsed_ms))
         else:
             for t_ms in latencies_ms:
                 self.policy.on_query_end(float(t_ms), self.sla_ms)
+                if self.obs.enabled:
+                    self.obs.observe("budgeter_feedback_ms", float(t_ms))
+        if self.obs.enabled:
+            self.obs.gauge("budgeter_alpha", float(self.policy.alpha))
 
 
 @dataclasses.dataclass
@@ -137,6 +152,12 @@ class ShardedSlaBudgeter(SlaBudgeter):
     def budgets(self, n: int, plans=None) -> np.ndarray:
         """[n, n_shards] int32 per-(query, shard) postings budgets."""
         caps = self._rate_caps()
+        if self.obs.enabled:
+            self.obs.gauge("budgeter_alpha", float(self.policy.alpha))
+            for s in range(self.n_shards):
+                self.obs.gauge(
+                    "budgeter_shard_cap", float(int(caps[s])), shard=s
+                )
         out = np.tile(caps.astype(np.int64), (n, 1))
         unbounded = float(caps.max()) >= float(2**31 - 1)
         if self.mode == "boundsum" and plans is not None and not unbounded:
@@ -175,6 +196,11 @@ class ShardedSlaBudgeter(SlaBudgeter):
             if active_mask is not None:
                 new = np.where(np.asarray(active_mask, bool), new, self.rates)
             self.rates = new
+            if self.obs.enabled:
+                for s in range(self.n_shards):
+                    self.obs.gauge(
+                        "budgeter_shard_rate", float(self.rates[s]), shard=s
+                    )
         self._feed_policy(elapsed_ms, latencies_ms)
 
     def observe(
@@ -214,6 +240,25 @@ class ShardedSlaBudgeter(SlaBudgeter):
         )
 
 
+def result_exit_reason(res) -> str:
+    """Merged exit reason for any result kind the serving stack produces.
+
+    ``BatchResult`` carries its own reason; a ``ShardedResult`` merges its
+    per-shard reasons with budget/down dominating (any shard cut short by
+    the anytime knob or an outage makes the merged answer budget-limited).
+    """
+    reasons = getattr(res, "shard_exit_reasons", None)
+    if reasons is None:
+        return res.exit_reason
+    if "budget" in reasons:
+        return "budget"
+    if "down" in reasons:
+        return "down"
+    if "safe" in reasons:
+        return "safe"
+    return "exhausted"
+
+
 @dataclasses.dataclass
 class ServedQuery:
     rid: int
@@ -231,12 +276,17 @@ class MicroBatchServer:
         bengine: BatchEngine,
         budgeter: SlaBudgeter,
         max_batch: int | None = None,
-        clock=time.perf_counter,
+        clock=None,
+        obs=NOOP,
     ):
         self.bengine = bengine
         self.budgeter = budgeter
         self.max_batch = max_batch or bengine.spec.max_batch
-        self.clock = clock
+        self.obs = obs
+        # One clock for everything: an explicit ``clock=`` wins, otherwise
+        # the instrumentation handle's (``NOOP`` carries the wall clock), so
+        # trace timestamps and SLA feedback always read the same source.
+        self.clock = clock if clock is not None else obs.clock
         self._queue: list[tuple[int, np.ndarray, float]] = []
         self._next_rid = 0
 
@@ -244,6 +294,9 @@ class MicroBatchServer:
         rid = self._next_rid
         self._next_rid += 1
         self._queue.append((rid, np.asarray(q_terms), self.clock()))
+        if self.obs.enabled:
+            self.obs.count("submitted", server="micro")
+            self.obs.trace_begin(rid)
         return rid
 
     @property
@@ -284,10 +337,15 @@ class MicroBatchServer:
         """Serve one micro-batch from the head of the queue."""
         if not self._queue:
             return []
+        obs = self.obs
         cut, self._queue = self._queue[: self.max_batch], self._queue[self.max_batch :]
         rids = [c[0] for c in cut]
         enq = [c[2] for c in cut]
+        # Stage timestamps are taken only when instrumented, so a FakeClock
+        # run without obs sees the exact pre-instrumentation read sequence.
+        t_cut = self.clock() if obs.enabled else 0.0
         plans = self.bengine.plan_many([c[1] for c in cut])
+        t_planned = self.clock() if obs.enabled else 0.0
         budgets = self.budgeter.budgets(len(plans), plans=plans)
 
         t0 = self.clock()
@@ -297,7 +355,7 @@ class MicroBatchServer:
 
         latencies_ms = [(served_at - t_enq) * 1e3 for t_enq in enq]
         self._observe(batch_ms, results, latencies_ms=latencies_ms)
-        return [
+        served = [
             ServedQuery(
                 rid=rid,
                 result=res,
@@ -306,6 +364,50 @@ class MicroBatchServer:
             )
             for rid, t_enq, res in zip(rids, enq, results)
         ]
+        if obs.enabled:
+            self._record_batch(
+                served, enq, budgets, t_cut, t_planned, t0, served_at, batch_ms
+            )
+        return served
+
+    def _record_batch(
+        self, served, enq, budgets, t_cut, t_planned, t0, served_at, batch_ms
+    ) -> None:
+        """Metrics + trace spans for one drained batch (obs-enabled only)."""
+        obs = self.obs
+        obs.observe("batch_size", len(served), server="micro")
+        obs.observe("batch_ms", batch_ms, server="micro")
+        per_q = np.asarray(budgets, np.int64)
+        if per_q.ndim == 2:  # sharded budgeter: [n, S] -> per-query totals
+            per_q = per_q.sum(axis=1)
+        sla = getattr(self.budgeter, "sla_ms", None)
+        for sq, t_enq, bq in zip(served, enq, per_q):
+            reason = result_exit_reason(sq.result)
+            obs.count("served_queries", server="micro", reason=reason)
+            obs.observe("latency_ms", sq.latency_ms, server="micro")
+            obs.observe("budget_postings", int(bq), server="micro")
+            obs.trace_span(sq.rid, "queue", t_enq, t_cut)
+            obs.trace_span(sq.rid, "plan", t_cut, t_planned, batch=len(served))
+            obs.trace_span(
+                sq.rid, "budget", t_planned, t0, budget_postings=int(bq)
+            )
+            obs.trace_span(
+                sq.rid, "service", t0, served_at, device_ms=round(batch_ms, 4)
+            )
+            attrs = dict(
+                server="micro",
+                latency_ms=round(sq.latency_ms, 4),
+                exit_reason=reason,
+                batch=len(served),
+            )
+            if sla is not None and sla != float("inf"):
+                attrs["sla_ms"] = float(sla)
+            fb = getattr(sq.result, "fidelity_bound", None)
+            if fb is not None:
+                attrs["fidelity_bound"] = int(fb)
+                attrs["exact"] = bool(sq.result.exact)
+            obs.trace_attr(sq.rid, **attrs)
+            obs.trace_end(sq.rid)
 
     def replay(
         self, queries: Sequence[np.ndarray], batch_size: int | None = None

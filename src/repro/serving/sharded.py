@@ -360,7 +360,11 @@ class ShardedEngine:
         use_mesh: bool | None = None,
         mesh_axis: str = "shard",
         shards: list[IndexShard] | None = None,
+        obs=None,
     ):
+        from repro.obs import NOOP
+
+        self.obs = obs if obs is not None else NOOP
         self.engine = engine
         self.k = engine.k
         self.s_pad = engine.s_pad
@@ -723,6 +727,12 @@ class ShardedEngine:
                     exact=exact,
                 )
             )
+            if self.obs.enabled:
+                self.obs.count("sharded_queries")
+                for s, r in enumerate(reasons):
+                    self.obs.count("shard_exits", shard=s, reason=r)
+                self.obs.count("sharded_exact", exact=exact)
+                self.obs.observe("fidelity_bound", fb)
         return results
 
 
@@ -735,10 +745,15 @@ class ShardedBatchEngine:
     dispatch covers every (lane, shard) pair.
     """
 
-    def __init__(self, sengine: ShardedEngine, spec: BucketSpec | None = None):
+    def __init__(
+        self, sengine: ShardedEngine, spec: BucketSpec | None = None, obs=None
+    ):
         self.sengine = sengine
         self.engine = sengine.engine
         self.spec = spec or BucketSpec()
+        # Default to the wrapped engine's handle so the whole sharded stack
+        # shares one registry unless a caller deliberately splits them.
+        self.obs = obs if obs is not None else sengine.obs
         self.compiled_shapes: set[tuple[int, int]] = set()
         self.batches_run = 0
 

@@ -40,6 +40,7 @@ __all__ = [
     "assert_bitwise_equal_engines",
     "assert_batch_matches_sequential",
     "assert_sharded_matches_engine",
+    "assert_exit_reason_conservation",
 ]
 
 INT32_MAX = 2**31 - 1
@@ -193,6 +194,43 @@ def assert_batch_matches_sequential(
             "exit_budget": bool(br.exit_budget),
         }
         assert_results_equal(got, single, context=f"query {i}: batch vs loop")
+
+
+def assert_exit_reason_conservation(
+    obs, counter_name: str, expected_reasons: Sequence[str],
+    context: str = "", **fixed_labels
+) -> None:
+    """Telemetry exit-reason counters conserve queries (DESIGN.md §13).
+
+    ``expected_reasons`` is the per-query exit reason list recomputed from
+    the *returned* results — the ground truth the caller already holds.
+    The counter named ``counter_name`` in ``obs``'s registry, restricted
+    to label sets matching ``fixed_labels`` (e.g. ``server="inflight"``),
+    must (a) sum to ``len(expected_reasons)`` — every query served is
+    counted exactly once, none dropped, none double-counted — and (b)
+    match the returned reasons as a multiset, so telemetry can never
+    report an exit mix the results contradict.
+    """
+    import collections
+
+    want = collections.Counter(str(r) for r in expected_reasons)
+    counter = obs.metrics.counter(counter_name)
+    fixed = {str(k): str(v) for k, v in fixed_labels.items()}
+    got: collections.Counter = collections.Counter()
+    for key in counter.labelsets():
+        labels = dict(key)
+        if any(labels.get(k) != v for k, v in fixed.items()):
+            continue
+        got[labels.get("reason", "")] += int(counter.value(**labels))
+    ctx = context or counter_name
+    assert sum(got.values()) == len(expected_reasons), (
+        f"{ctx}: counted {sum(got.values())} queries in {counter_name}"
+        f"{fixed or ''}, served {len(expected_reasons)}"
+    )
+    assert got == want, (
+        f"{ctx}: exit-reason mix diverged\n  telemetry: {dict(got)}"
+        f"\n  results:   {dict(want)}"
+    )
 
 
 def assert_sharded_matches_engine(

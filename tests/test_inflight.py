@@ -80,16 +80,9 @@ class FixedBudgeter(SlaBudgeter):
         return np.full(n, self.cap, dtype=np.int32)
 
 
-class FakeClock:
-    """Deterministic clock: every reading advances time by ``dt`` seconds."""
-
-    def __init__(self, dt: float):
-        self.t = 0.0
-        self.dt = dt
-
-    def __call__(self) -> float:
-        self.t += self.dt
-        return self.t
+# Deterministic clock shared with the observability substrate, so tests and
+# instrumentation agree on what a fake second is (DESIGN.md §13).
+from repro.obs import FakeClock  # noqa: E402
 
 
 # ----------------------------------------------------- core resume invariant

@@ -1,0 +1,447 @@
+"""Observability substrate (repro.obs): metrics, traces, export, report.
+
+Three contracts pinned here, per ISSUE 8 / DESIGN.md §13:
+
+  * **results neutrality** — serving with full instrumentation (metrics +
+    tracing at sample rate 1.0, durable JSONL sink) is *bitwise identical*
+    to serving with the no-op handle: same doc ids, scores, and exit
+    reasons on both the micro-batch and in-flight paths;
+  * **exit-reason conservation** — telemetry exit counters sum to the
+    number of queries served and match the returned per-query reasons as
+    a multiset, at every layer (Engine, BatchEngine, both servers,
+    ShardedEngine per shard);
+  * **substrate unit behaviour** — log2 histogram bucketing/percentiles,
+    deterministic trace sampling, torn-tail JSONL recovery, Prometheus
+    exposition shape, and the report CLI's summary math.
+"""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import pytest
+
+from differential import assert_exit_reason_conservation
+from repro.core.clustered_index import build_index
+from repro.core.range_daat import Engine, exit_reason
+from repro.data.synth import make_corpus, make_query_log
+from repro.obs import (
+    N_BUCKETS,
+    FakeClock,
+    Instrumentation,
+    MetricsRegistry,
+    NOOP,
+    Tracer,
+    TraceSink,
+    json_snapshot,
+    prometheus_text,
+    read_traces,
+    render,
+    summarize,
+)
+from repro.obs.metrics import BUCKET_EDGES, bucket_index
+from repro.obs.trace import sampled
+from repro.serving import (
+    BatchEngine,
+    BucketSpec,
+    InflightServer,
+    MicroBatchServer,
+    ShardedEngine,
+    SlaBudgeter,
+    result_exit_reason,
+)
+
+
+def _small_setup(seed: int, n_ranges: int, k: int = 5, n_queries: int = 12):
+    corpus = make_corpus(
+        n_docs=900, n_terms=700, n_topics=4, mean_doc_len=50, seed=seed
+    )
+    idx = build_index(corpus, n_ranges=n_ranges, strategy="clustered")
+    eng = Engine(idx, k=k)
+    log = make_query_log(corpus, n_queries=n_queries, seed=seed + 1)
+    return eng, [log.terms[i] for i in range(log.n_queries)]
+
+
+# --------------------------------------------------------------------------
+# metrics substrate
+# --------------------------------------------------------------------------
+
+
+def test_bucket_index_edges():
+    assert bucket_index(-3.0) == 0
+    assert bucket_index(0.0) == 0
+    assert bucket_index(0.9) == 0
+    assert bucket_index(1.0) == 1
+    assert bucket_index(1.9) == 1  # int() floors into [1, 2)
+    assert bucket_index(2.0) == 2
+    assert bucket_index(3.0) == 2
+    assert bucket_index(4.0) == 3
+    assert bucket_index(2.0**62) == N_BUCKETS - 1
+    assert bucket_index(float(2**200)) == N_BUCKETS - 1  # overflow clamps
+    assert BUCKET_EDGES[-1] == float("inf")
+
+
+def test_counter_gauge_label_series():
+    reg = MetricsRegistry()
+    c = reg.counter("served")
+    c.inc(reason="safe")
+    c.inc(2.0, reason="budget")
+    c.inc(reason="safe")
+    assert c.value(reason="safe") == 2.0
+    assert c.value(reason="budget") == 2.0
+    assert c.value(reason="down") == 0.0
+    assert c.total() == 4.0
+    g = reg.gauge("alpha")
+    g.set(1.5)
+    g.set(2.5)  # last write wins
+    assert g.value() == 2.5
+    # get-or-create is idempotent per name; kind mismatch is an error.
+    assert reg.counter("served") is c
+    with pytest.raises(TypeError):
+        reg.gauge("served")
+
+
+def test_histogram_percentiles_one_octave():
+    reg = MetricsRegistry()
+    h = reg.histogram("latency_ms")
+    values = [0.4, 1.5, 3.0, 3.0, 6.0, 12.0, 100.0, 900.0]
+    for v in values:
+        h.observe(v)
+    assert h.count() == len(values)
+    assert h.mean() == pytest.approx(float(np.mean(values)))
+    # Log2 buckets: each percentile lands within one octave of the truth.
+    for p in (50.0, 95.0, 99.0):
+        got = h.percentile(p)
+        true = float(np.percentile(values, p))
+        assert true / 2.0 <= got <= true * 2.0 + 1.0, (p, got, true)
+    snap = h.snapshot()["samples"][""]
+    assert snap["count"] == len(values)
+    assert sum(snap["buckets"].values()) == len(values)
+
+
+def test_histogram_overflow_bucket_reports_floor():
+    h = MetricsRegistry().histogram("huge")
+    h.observe(float(2**100))
+    assert h.percentile(99.0) == 2.0 ** (N_BUCKETS - 2)
+
+
+# --------------------------------------------------------------------------
+# tracing substrate
+# --------------------------------------------------------------------------
+
+
+def test_sampling_is_deterministic_and_calibrated():
+    assert all(sampled(r, 1.0) for r in range(100))
+    assert not any(sampled(r, 0.0) for r in range(100))
+    hits = [sampled(r, 0.25) for r in range(4000)]
+    assert hits == [sampled(r, 0.25) for r in range(4000)]  # run-stable
+    assert 0.15 < np.mean(hits) < 0.35
+
+
+def test_tracer_ring_and_sink_roundtrip(tmp_path):
+    path = str(tmp_path / "trace.jsonl")
+    tr = Tracer(sample_rate=1.0, ring=4, sink=TraceSink(path))
+    for rid in range(6):
+        tr.begin(rid)
+        t = tr.get(rid)
+        t.span("queue", 0.0, 0.001, depth=rid)
+        t.attrs["exit_reason"] = "safe"
+        tr.end(rid)
+    tr.close()
+    assert len(tr.ring) == 4  # bounded window
+    assert tr.started == 6 and tr.finished == 6
+    recs = read_traces(path)
+    assert [r["rid"] for r in recs] == list(range(6))  # sink keeps all
+    assert recs[0]["spans"][0]["name"] == "queue"
+    assert recs[0]["exit_reason"] == "safe"
+
+
+def test_read_traces_skips_torn_tail_only(tmp_path):
+    path = str(tmp_path / "trace.jsonl")
+    sink = TraceSink(path)
+    tr = Tracer(sample_rate=1.0, sink=sink)
+    for rid in range(3):
+        tr.begin(rid)
+        tr.end(rid)
+    tr.close()
+    with open(path, "a", encoding="utf-8") as f:
+        f.write('{"rid": 3, "torn')  # crash mid-append
+    assert [r["rid"] for r in read_traces(path)] == [0, 1, 2]
+    # The next sink append repairs the tail before writing.
+    tr2 = Tracer(sample_rate=1.0, sink=TraceSink(path))
+    tr2.begin(7)
+    tr2.end(7)
+    tr2.close()
+    assert [r["rid"] for r in read_traces(path)] == [0, 1, 2, 7]
+    # Mid-file corruption is an error, not a silent skip.
+    lines = open(path, encoding="utf-8").read().splitlines()
+    lines.insert(1, "{broken")
+    with open(path, "w", encoding="utf-8") as f:
+        f.write("\n".join(lines) + "\n")
+    with pytest.raises(ValueError):
+        read_traces(path)
+
+
+def test_fake_clock_is_shared_and_deterministic():
+    clock = FakeClock(dt=0.5, start=10.0)
+    assert clock() == 10.5
+    assert clock() == 11.0
+    clock.advance(4.0)
+    assert clock() == 15.5
+
+
+# --------------------------------------------------------------------------
+# export + report
+# --------------------------------------------------------------------------
+
+
+def test_prometheus_exposition_shape():
+    reg = MetricsRegistry()
+    reg.counter("served", "queries served").inc(3, server="micro", reason="safe")
+    reg.gauge("alpha").set(1.25)
+    h = reg.histogram("latency_ms")
+    for v in (0.5, 3.0, 70.0):
+        h.observe(v, server="micro")
+    text = prometheus_text(reg)
+    assert '# TYPE served counter' in text
+    assert 'served_total{reason="safe",server="micro"} 3' in text
+    assert "alpha 1.25" in text
+    assert '# TYPE latency_ms histogram' in text
+    assert 'latency_ms_bucket{server="micro",le="+Inf"} 3' in text
+    assert 'latency_ms_count{server="micro"} 3' in text
+    # Cumulative buckets: every le line is monotone nondecreasing.
+    les = [
+        (float(ln.split('le="')[1].split('"')[0].replace("+Inf", "inf")),
+         int(ln.rsplit(" ", 1)[1]))
+        for ln in text.splitlines() if ln.startswith("latency_ms_bucket")
+    ]
+    assert les == sorted(les) and les[-1][1] == 3
+    json.loads(json_snapshot(reg))  # exposition twin is valid JSON
+
+
+def test_report_summary_math():
+    recs = []
+    for i in range(10):
+        lat = 2.0 + i  # 2..11 ms
+        recs.append({
+            "rid": i,
+            "exit_reason": "safe" if i % 2 == 0 else "budget",
+            "latency_ms": lat,
+            "sla_ms": 8.0,
+            "quanta": 1 + i % 3,
+            "fidelity_bound": 0 if i < 8 else 5,
+            "exact": i < 8,
+            "spans": [
+                {"name": "queue", "t0_ms": 0.0, "dur_ms": 1.0},
+                {"name": "service", "t0_ms": 1.0, "dur_ms": lat - 1.0},
+            ],
+        })
+    s = summarize(recs, sla_ms=8.0)
+    assert s["queries"] == 10
+    assert s["sla"]["judged"] == 10
+    assert s["sla"]["met"] == 7  # latencies 2..8 of 2..11
+    assert s["sla"]["compliance"] == pytest.approx(0.7)
+    assert s["exit_reasons"] == {"budget": 5, "safe": 5}
+    assert s["queue_wait_ms"]["p50"] == pytest.approx(1.0)
+    assert 0.0 < s["queue_share"] < 0.5
+    assert s["fidelity_bound"]["nonzero"] == 2
+    assert s["inexact"] == 2
+    text = render(s)
+    assert "compliance" in text and "exit reasons" in text
+
+
+def test_report_cli(tmp_path, capsys):
+    from repro.obs.__main__ import main
+
+    path = str(tmp_path / "t.jsonl")
+    tr = Tracer(sample_rate=1.0, sink=TraceSink(path))
+    for rid in range(4):
+        tr.begin(rid)
+        t = tr.get(rid)
+        t.span("queue", 0.0, 0.001)
+        t.attrs.update(exit_reason="safe", latency_ms=3.0)
+        tr.end(rid)
+    tr.close()
+    assert main(["report", path, "--sla-ms", "10"]) == 0
+    out = capsys.readouterr().out
+    assert "queries" in out and "4" in out
+    assert main(["report", path, "--json"]) == 0
+    assert json.loads(capsys.readouterr().out)["queries"] == 4
+    assert main(["report", str(tmp_path / "missing.jsonl")]) == 1
+
+
+# --------------------------------------------------------------------------
+# results neutrality: instrumentation changes nothing served
+# --------------------------------------------------------------------------
+
+
+def _served_observables(served):
+    return [
+        (
+            s.rid,
+            np.asarray(s.result.doc_ids).tolist(),
+            np.asarray(s.result.scores).tolist(),
+            result_exit_reason(s.result),
+        )
+        for s in sorted(served, key=lambda s: s.rid)
+    ]
+
+
+@pytest.mark.parametrize("mode", ["micro", "inflight"])
+def test_instrumented_serving_is_bitwise_identical(tmp_path, mode):
+    eng, queries = _small_setup(seed=3, n_ranges=6)
+    budgets = [None, 800]  # unbounded and budget-exit paths both pinned
+
+    def serve(obs, cap):
+        beng = BatchEngine(eng, BucketSpec(max_batch=4))
+        bud = SlaBudgeter(sla_ms=float("inf"), obs=obs)
+        if cap is not None:
+            bud.budgets = lambda n, plans=None: np.full(n, cap, np.int32)
+        if mode == "micro":
+            srv = MicroBatchServer(beng, bud, max_batch=4, obs=obs)
+            for q in queries:
+                srv.submit(q)
+            served = []
+            while srv.pending:
+                served.extend(srv.drain_once())
+            return served
+        srv = InflightServer(beng, bud, n_slots=4, quantum=2, obs=obs)
+        for q in queries:
+            srv.submit(q)
+        return srv.run_until_idle()
+
+    for cap in budgets:
+        path = str(tmp_path / f"{mode}-{cap}.jsonl")
+        obs = Instrumentation.make(sample_rate=1.0, trace_path=path)
+        instrumented = serve(obs, cap)
+        obs.close()
+        baseline = serve(NOOP, cap)
+        assert _served_observables(instrumented) == _served_observables(baseline)
+        # Full-rate tracing saw every query exactly once.
+        recs = read_traces(path)
+        assert sorted(r["rid"] for r in recs) == sorted(
+            s.rid for s in baseline
+        )
+        for r in recs:
+            assert r["exit_reason"] in ("safe", "budget", "exhausted", "down")
+            assert any(sp["name"] == "queue" for sp in r["spans"])
+            assert any(
+                sp["name"] in ("service", "dispatch") for sp in r["spans"]
+            )
+
+
+# --------------------------------------------------------------------------
+# exit-reason conservation at every layer
+# --------------------------------------------------------------------------
+
+
+def test_engine_exit_reason_conservation():
+    eng, queries = _small_setup(seed=5, n_ranges=6)
+    obs = Instrumentation()
+    eng_i = Engine(eng.index, k=5, obs=obs)
+    reasons = []
+    for i, q in enumerate(queries):
+        plan = eng_i.plan(q)
+        kw = {"budget_postings": 500} if i % 2 else {}
+        res = eng_i.traverse(plan, **kw)
+        reasons.append(exit_reason(bool(res.exit_safe), bool(res.exit_budget)))
+    assert_exit_reason_conservation(obs, "engine_queries", reasons)
+    assert obs.metrics.histogram("engine_postings").count() == len(queries)
+
+
+def test_batch_engine_exit_reason_conservation():
+    eng, queries = _small_setup(seed=6, n_ranges=6)
+    obs = Instrumentation()
+    beng = BatchEngine(Engine(eng.index, k=5), BucketSpec(max_batch=4), obs=obs)
+    plans = beng.plan_many(queries)
+    caps = [400 if i % 3 == 0 else None for i in range(len(plans))]
+    results = beng.run_batch(
+        plans, budget_postings=[c or 2**31 - 1 for c in caps]
+    )
+    assert_exit_reason_conservation(
+        obs, "batch_engine_queries", [r.exit_reason for r in results]
+    )
+
+
+@pytest.mark.parametrize("mode", ["micro", "inflight"])
+def test_server_exit_reason_conservation(mode):
+    eng, queries = _small_setup(seed=7, n_ranges=6)
+    obs = Instrumentation.make(sample_rate=1.0)
+    beng = BatchEngine(eng, BucketSpec(max_batch=4))
+    bud = SlaBudgeter(sla_ms=float("inf"), obs=obs)
+    if mode == "micro":
+        srv = MicroBatchServer(beng, bud, max_batch=4, obs=obs)
+        for q in queries:
+            srv.submit(q)
+        served = []
+        while srv.pending:
+            served.extend(srv.drain_once())
+        label = "micro"
+    else:
+        srv = InflightServer(beng, bud, n_slots=4, quantum=2, obs=obs)
+        for q in queries:
+            srv.submit(q)
+        served = srv.run_until_idle()
+        label = "inflight"
+    assert_exit_reason_conservation(
+        obs,
+        "served_queries",
+        [result_exit_reason(s.result) for s in served],
+        server=label,
+    )
+    sub = obs.metrics.counter("submitted")
+    assert sub.value(server=label) == len(queries)
+
+
+def test_sharded_exit_reason_conservation_per_shard():
+    eng, queries = _small_setup(seed=8, n_ranges=8)
+    obs = Instrumentation()
+    se = ShardedEngine(
+        Engine(eng.index, k=5), n_shards=2, use_mesh=False, obs=obs
+    )
+    per_shard: dict[int, list[str]] = {0: [], 1: []}
+    merged = []
+    for q in queries:
+        r = se.traverse(se.engine.plan(q))
+        for s, reason in enumerate(r.shard_exit_reasons):
+            per_shard[s].append(reason)
+        merged.append(result_exit_reason(r))
+    for s, reasons in per_shard.items():
+        assert_exit_reason_conservation(
+            obs, "shard_exits", reasons, context=f"shard {s}", shard=s
+        )
+    # The merged counter sums to queries served, one count per query.
+    total = obs.metrics.counter("sharded_queries").total()
+    assert total == len(queries) == len(merged)
+    assert obs.metrics.histogram("fidelity_bound").count() == len(queries)
+
+
+# --------------------------------------------------------------------------
+# control plane instrumentation
+# --------------------------------------------------------------------------
+
+
+def test_control_plane_health_and_serving_telemetry():
+    from repro.control import ControlPlane
+
+    eng, queries = _small_setup(seed=9, n_ranges=8)
+    obs = Instrumentation.make(sample_rate=1.0)
+    plane = ControlPlane(eng, n_shards=2, use_mesh=False, obs=obs)
+    served = plane.replay(queries, batch_size=4)
+    assert len(served) == len(queries)
+    plane.mark_down(1)
+    down = plane.replay(queries[:4], batch_size=4)
+    plane.mark_up(1)
+    assert len(down) == 4
+    ht = obs.metrics.counter("health_transitions")
+    assert ht.value(event="down", shard=1) == 1
+    assert ht.value(event="up", shard=1) == 1
+    assert_exit_reason_conservation(
+        obs,
+        "served_queries",
+        [result_exit_reason(s.result) for s in served + down],
+        server="micro",
+    )
+    # Down-shard serving surfaced inexactness in the fidelity telemetry.
+    assert obs.metrics.counter("sharded_exact").value(exact=False) >= 1

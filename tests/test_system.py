@@ -23,17 +23,9 @@ from repro.core.anytime import (
 from repro.core.metrics import rbo
 from repro.core.oracle import exhaustive_topk
 
-
-class FakeClock:
-    """Deterministic clock: advances ``tick`` seconds per call."""
-
-    def __init__(self, tick_s: float = 0.001):
-        self.t = 0.0
-        self.tick = tick_s
-
-    def __call__(self) -> float:
-        self.t += self.tick
-        return self.t
+# Deterministic clock shared with the observability substrate (repro.obs):
+# one definition of a fake second for every SLA/latency test.
+from repro.obs import FakeClock
 
 
 @pytest.mark.parametrize(
@@ -60,7 +52,7 @@ def test_unlimited_budget_is_rank_safe(engine, index, queries):
 
 def test_undershoot_never_violates_with_bounded_range_time(engine, queries):
     """Undershoot(t_max) must finish within B when ranges cost <= t_max."""
-    clock = FakeClock(tick_s=0.0005)  # every clock call costs 0.5 ms
+    clock = FakeClock(dt=0.0005)  # every clock call costs 0.5 ms
     plan = engine.plan(queries[1])
     # Each range costs ~2 clock calls = ~1 ms << t_max = 5 ms.
     res = run_query_anytime(
@@ -70,7 +62,7 @@ def test_undershoot_never_violates_with_bounded_range_time(engine, queries):
 
 
 def test_predictive_terminates_under_pressure(engine, queries):
-    clock = FakeClock(tick_s=0.004)  # 4 ms per clock call -> ranges look slow
+    clock = FakeClock(dt=0.004)  # 4 ms per clock call -> ranges look slow
     plan = engine.plan(queries[1])
     res = run_query_anytime(
         engine, plan, policy=Predictive(1.0), budget_ms=30.0, clock=clock
