@@ -1,0 +1,205 @@
+"""Perf-regression gate over the benchmark trajectory (DESIGN.md §14).
+
+Compares a fresh ``BENCH_<id>.json`` against the last N git-tracked
+``benchmarks/trajectory.jsonl`` entries (same small/full preset, the
+fresh run's own id excluded):
+
+  * **q/s regressions** — every headline carrying a ``qps=...`` figure is
+    checked against the median of its historical values; a drop beyond
+    ``--tolerance`` (default 15%) is a regression. Small-preset runs
+    (CI's 1-core containers jitter ~10%) only *warn* on these — the gate
+    prints GitHub ``::warning`` annotations and exits 0 — while full-size
+    runs fail.
+  * **observability overhead** — the instrumented-vs-noop q/s gap from
+    the S6 overhead row must stay under ``--max-overhead-pct`` (default
+    5, the ISSUE 8/9 acceptance bar). Same warn-on-small policy.
+  * **recompiles** — a dispatch site recompiling an already-seen shape is
+    an anomaly by construction (leaked non-static arg, dtype drift);
+    nonzero recompile counts in the fresh profiler snapshot always fail.
+  * **metric-schema drift** — a metric name that the previous run's
+    registry exported but the fresh run's does not means a dashboard or
+    alert silently went dark; always fails, any preset.
+
+No history (first run on a branch, fresh clone) exits 0: the gate needs
+a baseline before it can gate.
+
+    python -m benchmarks.perf_gate BENCH_abc12345.json [--last 5]
+        [--tolerance 0.15] [--max-overhead-pct 5]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+
+try:
+    from benchmarks.run import TRAJECTORY, _obs_compact
+except ImportError:  # executed as a script: benchmarks/ on path, root not
+    sys.path.insert(
+        0, os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    )
+    from benchmarks.run import TRAJECTORY, _obs_compact
+
+_QPS = re.compile(r"(?:^|_)qps=([0-9.]+)")
+
+
+def parse_qps(derived: str) -> float | None:
+    """The ``qps=`` figure from a headline's derived string, if any."""
+    m = _QPS.search(derived or "")
+    return float(m.group(1)) if m else None
+
+
+def read_history(
+    path: str, exclude_id: str, small: bool, last: int
+) -> list[dict]:
+    """Last ``last`` same-preset trajectory entries, oldest first."""
+    if not os.path.exists(path):
+        return []
+    entries = []
+    with open(path, encoding="utf-8") as f:
+        for ln in f:
+            ln = ln.strip()
+            if not ln:
+                continue
+            e = json.loads(ln)
+            if e.get("id") == exclude_id or bool(e.get("small")) != small:
+                continue
+            entries.append(e)
+    return entries[-last:]
+
+
+def _median(vals: list[float]) -> float:
+    s = sorted(vals)
+    n = len(s)
+    return s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])
+
+
+def gate(
+    fresh: dict,
+    history: list[dict],
+    tolerance: float = 0.15,
+    max_overhead_pct: float = 5.0,
+) -> tuple[list[str], list[str]]:
+    """Returns (soft_regressions, hard_failures).
+
+    Soft = q/s and overhead threshold breaches (warn-only on small
+    presets). Hard = recompiles and metric-schema drift (always fail).
+    """
+    soft: list[str] = []
+    hard: list[str] = []
+
+    headlines = fresh.get("headlines") or {}
+    for name in sorted(headlines):
+        cur = parse_qps(headlines[name].get("derived", ""))
+        if cur is None:
+            continue
+        past = [
+            q
+            for e in history
+            if (q := parse_qps((e.get("headlines") or {}).get(name, "")))
+            is not None
+        ]
+        if not past:
+            continue
+        base = _median(past)
+        if cur < base * (1.0 - tolerance):
+            soft.append(
+                f"{name}: qps {cur:g} is {100 * (1 - cur / base):.1f}% below "
+                f"the median of the last {len(past)} runs ({base:g}), "
+                f"tolerance {tolerance:.0%}"
+            )
+
+    obs = _obs_compact(fresh.get("metrics"))
+    for name, rec in sorted(obs.items()):
+        overhead = rec.get("overhead_pct")
+        if overhead is not None and overhead > max_overhead_pct:
+            soft.append(
+                f"{name}: instrumentation overhead {overhead:g}% exceeds "
+                f"the {max_overhead_pct:g}% acceptance bar"
+            )
+        recompiles = (rec.get("profiler") or {}).get("recompiles", 0)
+        if recompiles:
+            hard.append(
+                f"{name}: {recompiles} jit recompile(s) on already-seen "
+                f"shapes — a leaked non-static argument or dtype drift"
+            )
+
+    prev_obs = next(
+        (e["obs"] for e in reversed(history) if e.get("obs")), None
+    )
+    if prev_obs:
+        for name, prev in sorted(prev_obs.items()):
+            want = set(prev.get("metric_names") or [])
+            if not want or name not in obs:
+                continue
+            have = set(obs[name].get("metric_names") or [])
+            gone = sorted(want - have)
+            if gone:
+                hard.append(
+                    f"{name}: metric(s) vanished from the registry "
+                    f"(dashboards/alerts reading them went dark): "
+                    f"{', '.join(gone)}"
+                )
+    return soft, hard
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m benchmarks.perf_gate")
+    ap.add_argument("bench_json", help="fresh BENCH_<id>.json to gate")
+    ap.add_argument(
+        "--last", type=int, default=5, help="trajectory entries to baseline on"
+    )
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=0.15,
+        help="allowed fractional q/s drop vs the historical median",
+    )
+    ap.add_argument(
+        "--max-overhead-pct",
+        type=float,
+        default=5.0,
+        help="instrumented-vs-noop q/s overhead acceptance bar",
+    )
+    ap.add_argument(
+        "--trajectory", default=TRAJECTORY, help="trajectory JSONL to read"
+    )
+    args = ap.parse_args(argv)
+
+    with open(args.bench_json, encoding="utf-8") as f:
+        fresh = json.load(f)
+    small = os.environ.get("REPRO_BENCH_SMALL") == "1"
+    history = read_history(
+        args.trajectory, fresh.get("id", ""), small, args.last
+    )
+
+    soft, hard = gate(
+        fresh,
+        history,
+        tolerance=args.tolerance,
+        max_overhead_pct=args.max_overhead_pct,
+    )
+
+    if not history:
+        print("perf_gate: no comparable trajectory history; nothing to gate")
+    for msg in soft:
+        # Small presets run on noisy shared CI cores: annotate, don't block.
+        print(f"::warning title=perf regression::{msg}" if small else msg)
+    for msg in hard:
+        print(f"::error title=perf gate::{msg}" if small else msg)
+    if hard:
+        return 1
+    if soft and not small:
+        return 1
+    print(
+        f"perf_gate: ok (id={fresh.get('id')}, baseline={len(history)} "
+        f"run(s), {len(soft)} warning(s))"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

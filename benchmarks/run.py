@@ -195,7 +195,39 @@ TRAJECTORY = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                           "trajectory.jsonl")
 
 
-def append_trajectory(rid: str, headlines: dict, failures: list) -> str:
+def _obs_compact(metrics: dict | None) -> dict:
+    """Compact per-module observability facts for the trajectory log.
+
+    One small dict per module that exported an OBS_SNAPSHOT: the
+    instrumented-vs-noop overhead, total profiler compile/recompile
+    counts, and the registered metric names — the inputs perf_gate.py
+    checks for q/s regressions and metric-schema drift.
+    """
+    out: dict = {}
+    for name, snap in sorted((metrics or {}).items()):
+        rec: dict = {}
+        overhead = (snap.get("overhead") or {}).get("overhead_pct")
+        if overhead is not None:
+            rec["overhead_pct"] = overhead
+        prof = snap.get("profiler") or {}
+        if prof:
+            rec["profiler"] = {
+                "compiles": sum(s.get("compiles", 0) for s in prof.values()),
+                "recompiles": sum(
+                    s.get("recompiles", 0) for s in prof.values()
+                ),
+            }
+        reg = snap.get("registry") or {}
+        if reg:
+            rec["metric_names"] = sorted(reg)
+        if rec:
+            out[name] = rec
+    return out
+
+
+def append_trajectory(
+    rid: str, headlines: dict, failures: list, metrics: dict | None = None
+) -> str:
     """Append one compact run record to the git-tracked trajectory log.
 
     ``BENCH_<id>.json`` is gitignored and CI only keeps it as an expiring
@@ -217,6 +249,9 @@ def append_trajectory(rid: str, headlines: dict, failures: list) -> str:
         },
         "failures": failures,
     }
+    obs = _obs_compact(metrics)
+    if obs:
+        entry["obs"] = obs
     lines = []
     if os.path.exists(TRAJECTORY):
         with open(TRAJECTORY, encoding="utf-8") as f:
@@ -245,7 +280,7 @@ def write_headline_file(
         payload["metrics"] = metrics
     with open(path, "w", encoding="utf-8") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
-    append_trajectory(rid, headlines, failures)
+    append_trajectory(rid, headlines, failures, metrics)
     return path
 
 

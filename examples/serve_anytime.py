@@ -29,12 +29,16 @@ Two engines over the same cluster-skipping index:
 All report percentile latencies, queries/sec, SLA compliance, and
 effectiveness (RBO vs exhaustive). ``--trace out.jsonl`` records a
 per-query trace (any mode, sample rate 1.0, DESIGN.md §13) for
-``python -m repro.obs report out.jsonl``.
+``python -m repro.obs report out.jsonl`` / ``... slo out.jsonl``.
+``--metrics snap.json`` exports the metrics registry (plus SLO/alert
+state and the dispatch profiler, DESIGN.md §14) for
+``python -m repro.obs watch snap.json``; in control mode the snapshot
+refreshes every drain, so a concurrent ``watch`` follows the run live.
 
     PYTHONPATH=src python examples/serve_anytime.py
         [--mode host|batch|sharded|control|inflight] [--sla-ms 15]
         [--queries 300] [--batch-size 16] [--quantum 1] [--shards 2]
-        [--replicas 1] [--trace out.jsonl]
+        [--replicas 1] [--trace out.jsonl] [--metrics snap.json]
 """
 
 import argparse
@@ -47,7 +51,9 @@ from repro.core.anytime import Reactive, run_query_anytime
 from repro.core.metrics import rbo
 from repro.core.oracle import exhaustive_topk
 from repro.data.synth import make_corpus, make_query_log
-from repro.obs import NOOP, Instrumentation
+from repro.obs import NOOP, Instrumentation, write_snapshot
+from repro.obs.detect import DriftMonitor, default_serving_detectors
+from repro.obs.slo import SloTracker, default_serving_slos
 from repro.serving import (
     BatchEngine,
     BucketSpec,
@@ -225,7 +231,8 @@ def serve_inflight(engine, log, sla_arg, oracle, args, rate0, exh_p99,
                   f"final alpha = {budgeter.policy.alpha:.2f}"))
 
 
-def serve_control(engine, log, sla_arg, oracle, args, obs=NOOP):
+def serve_control(engine, log, sla_arg, oracle, args, obs=NOOP,
+                  metrics_path=None):
     """Control-plane demo: outage + recovery + live reshard, one stream."""
     from repro.control import ControlPlane
 
@@ -235,6 +242,19 @@ def serve_control(engine, log, sla_arg, oracle, args, obs=NOOP):
         spec=BucketSpec(max_batch=args.batch_size),
         obs=obs,
     )
+    tracker = monitor = None
+    alerts_seen = []
+    if obs.enabled:
+        # Operations loop (DESIGN.md §14): SLO burn-rate accounting plus
+        # drift/skew detectors polled every drain, alerts feeding back into
+        # the plane (skew arms maybe_reshard, burn marks degraded-SLO).
+        tracker = SloTracker(obs, default_serving_slos(
+            sla_ms=sla_arg, fidelity_ceiling=None))
+        monitor = DriftMonitor(obs)
+        default_serving_detectors(monitor, n_shards=args.shards,
+                                  server="control")
+        monitor.subscribe(lambda ev: alerts_seen.append(ev.to_dict()))
+        plane.enable_operations(slos=tracker, monitor=monitor)
     st = plane.stats()
     print(f"control plane: {args.shards} shards x {args.replicas} replicas, "
           f"cuts={st['cuts']}, replica_mesh={st['replica_mesh']}, "
@@ -282,14 +302,27 @@ def serve_control(engine, log, sla_arg, oracle, args, obs=NOOP):
         cuts[1] = cuts[1] - 1 if cuts[1] > 1 else cuts[1] + 1
         if cuts[1] < cuts[2] and not np.array_equal(cuts, plane.cuts):
             task = plane.start_reshard(cuts)
+    def refresh_metrics():
+        if metrics_path and obs.enabled:
+            write_snapshot(
+                metrics_path, obs.metrics,
+                slo=tracker.evaluate() if tracker is not None else None,
+                alerts=alerts_seen[-32:],
+                profiler=(obs.profiler.snapshot()
+                          if obs.profiler is not None else None),
+                t=obs.clock(),
+            )
+
     qi = 2 * third
     while qi < len(queries) or plane.reshard_task is not None:
         for q in queries[qi : qi + args.batch_size]:
             plane.submit(q)
         qi += args.batch_size
         consume(plane.drain_once())
+        refresh_metrics()
     while plane.pending:
         consume(plane.drain_once())
+        refresh_metrics()
     wall = time.perf_counter() - t0
     if task is not None:
         print(f"  live reshard -> cuts={plane.cuts.tolist()} in "
@@ -300,6 +333,10 @@ def serve_control(engine, log, sla_arg, oracle, args, obs=NOOP):
     report(times, quality, sla, wall, len(times),
            extra=f"   degraded={degraded}, "
                  f"reshards={plane.reshards_completed}")
+    if plane.stats().get("degraded_slo"):
+        print("  SLO state: degraded (burn-rate alert firing)")
+    return {"slo": tracker.evaluate() if tracker is not None else None,
+            "alerts": alerts_seen}
 
 
 def main():
@@ -323,16 +360,22 @@ def main():
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="record a per-query JSONL trace (sample rate 1.0) "
                          "for `python -m repro.obs report PATH`")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="write a registry+SLO+profiler snapshot (JSON) "
+                         "for `python -m repro.obs watch PATH`")
     args = ap.parse_args()
 
-    obs = (Instrumentation.make(sample_rate=1.0, trace_path=args.trace)
-           if args.trace else NOOP)
+    obs = (Instrumentation.make(sample_rate=1.0, trace_path=args.trace,
+                                profile=bool(args.metrics))
+           if args.trace or args.metrics else NOOP)
     _, log, index, engine = build(args)
     exh_p99, oracle, rate0 = calibrate(engine, index, log, args)
+    extras = {}
     if args.mode == "host":
         serve_host(engine, log, args.sla_ms, oracle, exh_p99, obs=obs)
     elif args.mode == "control":
-        serve_control(engine, log, args.sla_ms, oracle, args, obs=obs)
+        extras = serve_control(engine, log, args.sla_ms, oracle, args,
+                               obs=obs, metrics_path=args.metrics) or {}
     elif args.mode == "inflight":
         serve_inflight(engine, log, args.sla_ms, oracle, args, rate0, exh_p99,
                        obs=obs)
@@ -342,9 +385,20 @@ def main():
                     n_shards=args.shards if args.mode == "sharded" else None,
                     obs=obs)
     if obs.enabled:
+        if args.metrics:
+            write_snapshot(
+                args.metrics, obs.metrics,
+                slo=extras.get("slo"), alerts=extras.get("alerts"),
+                profiler=(obs.profiler.snapshot()
+                          if obs.profiler is not None else None),
+                t=obs.clock(),
+            )
+            print(f"\nmetrics snapshot -> {args.metrics}  "
+                  f"(view: python -m repro.obs watch {args.metrics} --once)")
         obs.close()
-        print(f"\ntrace: {obs.tracer.finished} records -> {args.trace}  "
-              f"(summarize: python -m repro.obs report {args.trace})")
+        if args.trace:
+            print(f"\ntrace: {obs.tracer.finished} records -> {args.trace}  "
+                  f"(summarize: python -m repro.obs report {args.trace})")
 
 
 if __name__ == "__main__":

@@ -135,6 +135,15 @@ class ControlPlane:
         self.journal = journal
         self._journal_muted = False
         self._fp_cache: str | None = None
+        # Operations layer (DESIGN.md §14): attached via enable_operations.
+        self.monitor = None
+        self.slo_tracker = None
+        self.degraded_slo = False
+        self._skew_alert = False
+        self._ops_every = 1
+        self._drains = 0
+        if self.obs.enabled:
+            self.obs.gauge("plane_available", 1.0)
 
     @property
     def _fingerprint(self) -> str:
@@ -216,11 +225,27 @@ class ControlPlane:
 
         The reshard step runs strictly *between* dispatches, so the queue
         is never blocked behind cutover work; the swap happens here too,
-        once the successor engine reports ready.
+        once the successor engine reports ready. When the operations layer
+        is attached (``enable_operations``), the SLO tracker samples and
+        the drift monitor polls here as well — and a sustained shard-skew
+        alert arms ``maybe_reshard`` without waiting for an external
+        caller.
         """
         served = self.server.drain_once()
         self.batches_served += 1 if served else 0
         self.queries_served += len(served)
+        self._drains += 1
+        if (
+            (self.slo_tracker is not None or self.monitor is not None)
+            and self._drains % self._ops_every == 0
+        ):
+            if self.slo_tracker is not None:
+                self.slo_tracker.sample()
+                self.slo_tracker.evaluate()
+            if self.monitor is not None:
+                self.monitor.poll()
+        if self._skew_alert and self.reshard_task is None:
+            self.maybe_reshard()
         if self.reshard_task is not None:
             if served:
                 self.queries_served_during_reshard += len(served)
@@ -262,6 +287,13 @@ class ControlPlane:
     def _observe(self, batch_ms, results, latencies_ms=None) -> None:
         per_shard = np.sum([r.shard_postings for r in results], axis=0)
         up = ~self.health.shard_down_mask()
+        if self.obs.enabled:
+            # Per-shard postings counters: the ShardSkewProbe's signal
+            # (DESIGN.md §14) — same numbers the reshard planner EWMAs.
+            for s in range(per_shard.shape[0]):
+                self.obs.count(
+                    "shard_postings", float(per_shard[s]), shard=s
+                )
         self.budgeter.observe_sharded(
             batch_ms, per_shard, len(results), active_mask=up,
             latencies_ms=latencies_ms,
@@ -272,6 +304,35 @@ class ControlPlane:
         # (and wrong-direction) reshard.
         if up.all():
             self.planner.observe(per_shard, len(results))
+
+    # ----------------------------------------------------------- operations
+    def enable_operations(
+        self, slos=None, monitor=None, poll_every: int = 1
+    ) -> None:
+        """Attach the §14 operations layer to the drain loop.
+
+        ``slos`` is an ``SloTracker`` (sampled + evaluated every
+        ``poll_every`` drains, writing ``slo_*`` gauges into the plane's
+        registry); ``monitor`` a ``DriftMonitor`` — the plane subscribes
+        to its alerts: a ``shard_skew`` fire arms ``maybe_reshard`` on
+        subsequent drains, an SLO-burn fire flips the plane into a
+        degraded-SLO state (``stats()['degraded_slo']``), both clearing
+        with the alert.
+        """
+        self.slo_tracker = slos
+        self.monitor = monitor
+        self._ops_every = max(1, int(poll_every))
+        if monitor is not None:
+            monitor.subscribe(self._on_alert)
+
+    def _on_alert(self, event) -> None:
+        firing = event.state == "fire"
+        if event.detector == "shard_skew":
+            self._skew_alert = firing
+        elif "burn" in event.detector:
+            self.degraded_slo = firing
+            if self.obs.enabled:
+                self.obs.gauge("plane_degraded_slo", 1.0 if firing else 0.0)
 
     # -------------------------------------------------------------- journal
     def _journal_append(self, record: dict) -> None:
@@ -345,6 +406,9 @@ class ControlPlane:
         self.health.mark_down(shard, replica)
         if self.obs.enabled:
             self.obs.count("health_transitions", event="down", shard=shard)
+            self.obs.gauge(
+                "plane_available", 1.0 if self.health.all_up else 0.0
+            )
         self._journal_append(
             {"kind": "health", "event": "down", "shard": int(shard),
              "replica": None if replica is None else int(replica)}
@@ -354,6 +418,9 @@ class ControlPlane:
         self.health.mark_up(shard, replica)
         if self.obs.enabled:
             self.obs.count("health_transitions", event="up", shard=shard)
+            self.obs.gauge(
+                "plane_available", 1.0 if self.health.all_up else 0.0
+            )
         self._journal_append(
             {"kind": "health", "event": "up", "shard": int(shard),
              "replica": None if replica is None else int(replica)}
@@ -575,4 +642,9 @@ class ControlPlane:
             "queries_served": self.queries_served,
             "queries_served_during_reshard": self.queries_served_during_reshard,
             "alpha": round(float(self.budgeter.policy.alpha), 4),
+            "degraded_slo": self.degraded_slo,
+            "skew_alert": self._skew_alert,
+            "alerts_firing": (
+                self.monitor.firing() if self.monitor is not None else []
+            ),
         }

@@ -1,13 +1,24 @@
-"""Observability substrate: metrics, per-query traces, exposition.
+"""Observability substrate + operations layer: metrics, traces, SLOs.
 
 ``repro.obs`` deliberately imports nothing from the rest of ``repro`` —
 any layer (core engine through control plane) can depend on it without
 cycles. The one object most callers need is ``Instrumentation`` (or the
-shared ``NOOP`` default); see DESIGN.md §13.
+shared ``NOOP`` default); see DESIGN.md §13. On top of the substrate sit
+the operational components of DESIGN.md §14: the dispatch ``Profiler``,
+declarative SLOs with burn-rate tracking (``slo``), online drift
+detection (``detect``), and the ``watch``/``slo`` CLIs.
 """
 
+from repro.obs.catalog import METRIC_HELP, help_for
 from repro.obs.clock import DEFAULT_CLOCK, FakeClock
-from repro.obs.export import json_snapshot, prometheus_text
+from repro.obs.detect import (
+    AlertEvent,
+    DriftMonitor,
+    EwmaDetector,
+    ShardSkewProbe,
+    ThresholdDetector,
+)
+from repro.obs.export import json_snapshot, prometheus_text, write_snapshot
 from repro.obs.instrument import NOOP, Instrumentation, NoopInstrumentation
 from repro.obs.metrics import (
     N_BUCKETS,
@@ -16,7 +27,16 @@ from repro.obs.metrics import (
     Histogram,
     MetricsRegistry,
 )
+from repro.obs.profiler import Profiler, jit_cache_size
 from repro.obs.report import render, summarize
+from repro.obs.slo import (
+    CounterRatio,
+    GaugeTime,
+    HistogramBelow,
+    SloSpec,
+    SloTracker,
+    default_serving_slos,
+)
 from repro.obs.trace import QueryTrace, Tracer, TraceSink, read_traces
 
 __all__ = [
@@ -30,12 +50,28 @@ __all__ = [
     "Gauge",
     "Histogram",
     "N_BUCKETS",
+    "METRIC_HELP",
+    "help_for",
     "Tracer",
     "TraceSink",
     "QueryTrace",
     "read_traces",
     "prometheus_text",
     "json_snapshot",
+    "write_snapshot",
     "summarize",
     "render",
+    "Profiler",
+    "jit_cache_size",
+    "SloSpec",
+    "SloTracker",
+    "HistogramBelow",
+    "CounterRatio",
+    "GaugeTime",
+    "default_serving_slos",
+    "AlertEvent",
+    "EwmaDetector",
+    "ThresholdDetector",
+    "ShardSkewProbe",
+    "DriftMonitor",
 ]

@@ -10,11 +10,17 @@ anything Prometheus-shaped without taking a client-library dependency
 ``json_snapshot`` is the machine-readable sibling the benchmark driver
 attaches to ``BENCH_<id>.json`` so the perf trajectory carries internal
 counters (exit-reason mix, quanta, occupancy), not just headline q/s.
+
+``write_snapshot`` serializes the registry (plus optional SLO report and
+alert tail) to a file atomically — the handoff surface between a serving
+process and the ``python -m repro.obs watch`` dashboard, which re-reads
+the file at an interval from a separate process.
 """
 
 from __future__ import annotations
 
 import json
+import os
 
 from repro.obs.metrics import (
     BUCKET_EDGES,
@@ -24,7 +30,7 @@ from repro.obs.metrics import (
     MetricsRegistry,
 )
 
-__all__ = ["prometheus_text", "json_snapshot"]
+__all__ = ["prometheus_text", "json_snapshot", "write_snapshot"]
 
 
 def _fmt_labels(key: tuple, extra: tuple = ()) -> str:
@@ -81,3 +87,31 @@ def prometheus_text(metrics: MetricsRegistry) -> str:
 def json_snapshot(metrics: MetricsRegistry, indent: int | None = None) -> str:
     """The registry's full state as a JSON document."""
     return json.dumps(metrics.snapshot(), indent=indent, sort_keys=True)
+
+
+def write_snapshot(
+    path: str,
+    metrics: MetricsRegistry,
+    slo: dict | None = None,
+    alerts: list | None = None,
+    profiler: dict | None = None,
+    t: float | None = None,
+) -> None:
+    """Atomically write a dashboard snapshot file (tmp + rename).
+
+    The reader (``watch`` CLI) therefore always sees a complete JSON
+    document, never a torn write. ``alerts`` is a list of alert-event
+    dicts (newest last); ``slo`` is an ``SloTracker.evaluate()`` report;
+    ``profiler`` a ``Profiler.snapshot()``.
+    """
+    doc = {"t": t, "metrics": metrics.snapshot()}
+    if slo is not None:
+        doc["slo"] = slo
+    if alerts is not None:
+        doc["alerts"] = list(alerts)
+    if profiler is not None:
+        doc["profiler"] = profiler
+    tmp = f"{path}.tmp"
+    with open(tmp, "w") as fh:
+        json.dump(doc, fh, sort_keys=True)
+    os.replace(tmp, path)

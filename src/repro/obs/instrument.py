@@ -19,15 +19,17 @@ identical by construction (pinned in tests/test_obs.py).
 
 from __future__ import annotations
 
+from repro.obs.catalog import help_for
 from repro.obs.clock import DEFAULT_CLOCK
 from repro.obs.metrics import MetricsRegistry
+from repro.obs.profiler import Profiler
 from repro.obs.trace import Tracer, TraceSink
 
 __all__ = ["Instrumentation", "NoopInstrumentation", "NOOP"]
 
 
 class Instrumentation:
-    """Live metrics + tracing + clock bundle."""
+    """Live metrics + tracing + clock bundle (+ optional profiler)."""
 
     enabled = True
 
@@ -36,10 +38,12 @@ class Instrumentation:
         metrics: MetricsRegistry | None = None,
         tracer: Tracer | None = None,
         clock=DEFAULT_CLOCK,
+        profiler: Profiler | None = None,
     ):
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.tracer = tracer
         self.clock = clock
+        self.profiler = profiler
 
     @classmethod
     def make(
@@ -48,24 +52,33 @@ class Instrumentation:
         trace_path: str | None = None,
         ring: int = 1024,
         clock=DEFAULT_CLOCK,
+        profile: bool = False,
     ) -> "Instrumentation":
-        """Convenience constructor: metrics + a tracer (+ JSONL sink)."""
+        """Convenience constructor: metrics + a tracer (+ JSONL sink).
+
+        ``profile=True`` attaches a :class:`~repro.obs.profiler.Profiler`;
+        the serving dispatch sites pick it up via ``obs.profiler`` and add
+        compile tracking + the host/device/transfer time split.
+        """
         sink = TraceSink(trace_path) if trace_path else None
-        return cls(
+        obs = cls(
             MetricsRegistry(),
             Tracer(sample_rate=sample_rate, ring=ring, sink=sink),
             clock=clock,
         )
+        if profile:
+            obs.profiler = Profiler(obs)
+        return obs
 
     # -------------------------------------------------------------- metrics
     def count(self, name: str, value: float = 1.0, **labels) -> None:
-        self.metrics.counter(name).inc(value, **labels)
+        self.metrics.counter(name, help_for(name)).inc(value, **labels)
 
     def gauge(self, name: str, value: float, **labels) -> None:
-        self.metrics.gauge(name).set(value, **labels)
+        self.metrics.gauge(name, help_for(name)).set(value, **labels)
 
     def observe(self, name: str, value: float, **labels) -> None:
-        self.metrics.histogram(name).observe(value, **labels)
+        self.metrics.histogram(name, help_for(name)).observe(value, **labels)
 
     # -------------------------------------------------------------- tracing
     def trace_begin(self, rid: int) -> None:

@@ -211,6 +211,11 @@ class MetricsRegistry:
                 f"metric {name!r} already registered as {m.kind}, "
                 f"wanted {cls.kind}"
             )
+        elif help and not m.help:
+            # Backfill: a metric first touched through the raw registry
+            # (empty help) adopts the catalog help the moment an
+            # Instrumentation call names it.
+            m.help = help
         return m
 
     def counter(self, name: str, help: str = "") -> Counter:
@@ -224,6 +229,11 @@ class MetricsRegistry:
 
     def metrics(self) -> dict:
         return dict(self._metrics)
+
+    def missing_help(self) -> list[str]:
+        """Names of registered metrics with an empty help string (the
+        registry-wide "no undocumented metric" test hook)."""
+        return sorted(n for n, m in self._metrics.items() if not m.help)
 
     def snapshot(self) -> dict:
         """JSON-able state of every metric (the BENCH_*.json attachment)."""

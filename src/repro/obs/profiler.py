@@ -1,0 +1,198 @@
+"""Device-dispatch profiler: compile tracking, time split, HBM gauges.
+
+The serving layers dispatch padded batches through a small set of jitted
+entry points whose program cache is keyed by the pow2 bucket ladder
+(DESIGN.md §3/§11) — so in a healthy process the cache grows once per
+``(batch, width)`` bucket and then never again. The profiler turns that
+discipline into three observable facts per dispatch site:
+
+  * **compiles** — the jit cache grew while dispatching a shape the site
+    had not seen before (expected, once per bucket);
+  * **recompiles** — the cache grew on an *already-seen* shape. That is an
+    anomaly by construction (a leaked non-static argument, a dtype drift,
+    cache eviction) and is counted separately so a perf gate can fail on
+    ``recompiles > 0``;
+  * the **host-plan / dispatch / device-step / transfer** wall-clock split,
+    so a q/s regression can be attributed to the layer it lives in.
+
+Cache growth is read from the jitted callable's ``_cache_size()`` hook via
+:func:`jit_cache_size` — duck-typed, so this module imports neither jax nor
+any other ``repro`` package (the ``repro.obs`` isolation rule). When the
+hook is unavailable the profiler falls back to shape novelty: a new shape
+counts as a compile and recompiles become undetectable (counted 0).
+
+HBM residency is reported from *live* device buffers: callers hand
+:meth:`Profiler.record_hbm_once` any mapping of name -> array and the
+profiler duck-types ``.nbytes`` (plain ints also accepted, so the
+``ClusteredIndex.device_bytes``/``space_report`` expected-bytes dicts can
+be recorded the same way for cross-checks).
+
+Everything funnels through the owning ``Instrumentation`` handle, so the
+metrics land in the shared registry (with catalog help strings) and are
+exported by the existing Prometheus/JSON surfaces untouched. Timing-only:
+a profiled dispatch may add synchronization points, but never changes
+results — the bitwise-neutrality contract of DESIGN.md §13 holds with the
+profiler enabled.
+"""
+
+from __future__ import annotations
+
+__all__ = ["Profiler", "jit_cache_size"]
+
+
+def jit_cache_size(fn) -> int | None:
+    """Compiled-program cache size of a jitted callable, or None.
+
+    Duck-typed on the private-but-stable ``_cache_size`` hook so the obs
+    package needs no jax import; any callable without the hook (or whose
+    hook raises) simply opts out of compile detection.
+    """
+    probe = getattr(fn, "_cache_size", None)
+    if probe is None:
+        return None
+    try:
+        return int(probe())
+    except Exception:
+        return None
+
+
+class _SiteStats:
+    __slots__ = (
+        "dispatches",
+        "compiles",
+        "recompiles",
+        "shapes",
+        "plan_ms",
+        "dispatch_ms",
+        "device_ms",
+        "transfer_ms",
+        "hbm_bytes",
+    )
+
+    def __init__(self):
+        self.dispatches = 0
+        self.compiles = 0
+        self.recompiles = 0
+        self.shapes: set[tuple] = set()
+        self.plan_ms = 0.0
+        self.dispatch_ms = 0.0
+        self.device_ms = 0.0
+        self.transfer_ms = 0.0
+        self.hbm_bytes: dict[str, int] | None = None
+
+
+def _nbytes(value) -> int | None:
+    nb = getattr(value, "nbytes", None)
+    if nb is not None:
+        return int(nb)
+    if isinstance(value, (int, float)):
+        return int(value)
+    return None
+
+
+class Profiler:
+    """Per-site dispatch profiler attached to an ``Instrumentation``.
+
+    Sites call :meth:`record_dispatch` with the cache size read before and
+    after the device call (via :func:`jit_cache_size`) plus the wall-clock
+    split they measured; the profiler does the compile/recompile
+    classification, keeps plain-python tallies for :meth:`snapshot` (the
+    BENCH ``OBS_SNAPSHOT`` attachment), and mirrors everything into the
+    metrics registry through the obs handle.
+    """
+
+    def __init__(self, obs):
+        self.obs = obs
+        self._sites: dict[str, _SiteStats] = {}
+
+    def _site(self, site: str) -> _SiteStats:
+        st = self._sites.get(site)
+        if st is None:
+            st = self._sites[site] = _SiteStats()
+        return st
+
+    def record_dispatch(
+        self,
+        site: str,
+        shape: tuple,
+        *,
+        cache_before: int | None = None,
+        cache_after: int | None = None,
+        plan_ms: float | None = None,
+        dispatch_ms: float | None = None,
+        device_ms: float | None = None,
+        transfer_ms: float | None = None,
+    ) -> None:
+        st = self._site(site)
+        st.dispatches += 1
+        new_shape = shape not in st.shapes
+        st.shapes.add(shape)
+        if cache_before is not None and cache_after is not None:
+            compiled = cache_after > cache_before
+        else:
+            compiled = new_shape  # novelty fallback: no cache introspection
+        obs = self.obs
+        obs.count("profiler_dispatches", site=site)
+        if compiled and new_shape:
+            st.compiles += 1
+            obs.count("profiler_compiles", site=site)
+        elif compiled:
+            st.recompiles += 1
+            obs.count("profiler_recompiles", site=site)
+        for name, val in (
+            ("profiler_plan_ms", plan_ms),
+            ("profiler_dispatch_ms", dispatch_ms),
+            ("profiler_device_ms", device_ms),
+            ("profiler_transfer_ms", transfer_ms),
+        ):
+            if val is None:
+                continue
+            obs.observe(name, val, site=site)
+            short = name[len("profiler_") : -len("_ms")]
+            setattr(st, f"{short}_ms", getattr(st, f"{short}_ms") + val)
+
+    def record_hbm_once(self, site: str, arrays) -> None:
+        """Gauge live HBM residency for a site's device index, once.
+
+        ``arrays`` is any name -> array-or-int mapping (``DeviceIndex.
+        _asdict()``, ``device_bytes_report`` output, ...); entries without a
+        byte size (None leaves, nested dicts) are skipped. Idempotent per
+        site so the per-dispatch path stays O(1) after the first call.
+        """
+        st = self._site(site)
+        if st.hbm_bytes is not None:
+            return
+        report: dict[str, int] = {}
+        total = 0
+        for name, value in dict(arrays).items():
+            nb = _nbytes(value)
+            if nb is None:
+                continue
+            report[name] = nb
+            total += nb
+            self.obs.gauge("hbm_bytes", nb, site=site, array=name)
+        st.hbm_bytes = report
+        self.obs.gauge("hbm_total_bytes", total, site=site)
+
+    # -------------------------------------------------------------- report
+    def recompiles(self) -> int:
+        return sum(st.recompiles for st in self._sites.values())
+
+    def snapshot(self) -> dict:
+        """JSON-able per-site tallies (attached to BENCH ``OBS_SNAPSHOT``)."""
+        out = {}
+        for site, st in sorted(self._sites.items()):
+            out[site] = {
+                "dispatches": st.dispatches,
+                "compiles": st.compiles,
+                "recompiles": st.recompiles,
+                "shapes": sorted(list(s) for s in st.shapes),
+                "plan_ms": round(st.plan_ms, 3),
+                "dispatch_ms": round(st.dispatch_ms, 3),
+                "device_ms": round(st.device_ms, 3),
+                "transfer_ms": round(st.transfer_ms, 3),
+                "hbm_total_bytes": (
+                    sum(st.hbm_bytes.values()) if st.hbm_bytes else None
+                ),
+            }
+        return out

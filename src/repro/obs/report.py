@@ -49,7 +49,16 @@ def summarize(records: list[dict], sla_ms: float | None = None) -> dict:
     reasons: dict[str, int] = {}
     met = judged = 0
     inexact = 0
+    alerts = 0
+    queries: list[dict] = []
     for rec in records:
+        # Drift-detector alert events share the trace stream (DESIGN.md
+        # §14) — they are not queries.
+        if rec.get("kind") == "alert":
+            alerts += 1
+            continue
+        queries.append(rec)
+    for rec in queries:
         latency = rec.get("latency_ms")
         if latency is not None:
             lat.append(float(latency))
@@ -73,11 +82,12 @@ def summarize(records: list[dict], sla_ms: float | None = None) -> dict:
         if r is not None:
             reasons[r] = reasons.get(r, 0) + 1
 
-    n = len(records)
+    n = len(queries)
     qsum, ssum = float(np.sum(queue)), float(np.sum(service))
     total = qsum + ssum
     return {
         "queries": n,
+        "alerts": alerts,
         "sla": {
             "judged": judged,
             "met": met,
@@ -144,4 +154,6 @@ def render(summary: dict) -> str:
         )
     if s["inexact"]:
         lines.append(f"inexact results: {s['inexact']}")
+    if s.get("alerts"):
+        lines.append(f"alert events in trace: {s['alerts']}")
     return "\n".join(lines)

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 from typing import NamedTuple, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -23,6 +24,7 @@ from repro.core.range_daat import (
     batched_traverse,
     exit_reason,
 )
+from repro.obs.profiler import jit_cache_size
 from repro.serving.bucketing import (
     BucketSpec,
     batch_ladder,
@@ -179,6 +181,10 @@ class BatchEngine:
         results: list,
     ) -> None:
         batch = self.spec.batch_bucket(len(chunk_plans))
+        prof = self.obs.profiler if self.obs.enabled else None
+        if prof is not None:
+            clk = self.obs.clock
+            t_plan0 = clk()
         bp = stack_plans(chunk_plans, width, batch)
 
         # Dummy lanes get zero budgets -> they exit at i=0 having done no work.
@@ -188,6 +194,9 @@ class BatchEngine:
         m[: len(chunk_idx)] = maxr[chunk_idx]
 
         eng = self.engine
+        if prof is not None:
+            cache0 = jit_cache_size(batched_traverse)
+            t_disp0 = clk()
         res = batched_traverse(
             eng.dix,
             bp.blk_tab,
@@ -206,6 +215,12 @@ class BatchEngine:
         )
         self.compiled_shapes.add((batch, width))
         self.batches_run += 1
+        if prof is not None:
+            # Timing-only: the extra sync point moves the device wait out
+            # of the np.asarray conversions below; results are untouched.
+            t_dev0 = clk()
+            jax.block_until_ready(res)
+            t_dev1 = clk()
 
         vals = np.asarray(res.state.vals)
         ids = np.asarray(res.state.ids)
@@ -214,6 +229,19 @@ class BatchEngine:
         ranges = np.asarray(res.ranges_processed)
         safe = np.asarray(res.exit_safe)
         budg = np.asarray(res.exit_budget)
+        if prof is not None:
+            t_xfer1 = clk()
+            prof.record_dispatch(
+                "batch_engine",
+                (batch, width),
+                cache_before=cache0,
+                cache_after=jit_cache_size(batched_traverse),
+                plan_ms=(t_disp0 - t_plan0) * 1e3,
+                dispatch_ms=(t_dev0 - t_disp0) * 1e3,
+                device_ms=(t_dev1 - t_dev0) * 1e3,
+                transfer_ms=(t_xfer1 - t_dev1) * 1e3,
+            )
+            prof.record_hbm_once("batch_engine", eng.dix._asdict())
         for lane, qi in enumerate(chunk_idx):
             results[qi] = lane_result(
                 vals, ids, postings, blocks, ranges, safe, budg, lane

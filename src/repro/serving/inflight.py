@@ -57,6 +57,7 @@ from repro.serving.batch_engine import (
     lane_result,
 )
 from repro.obs import NOOP
+from repro.obs.profiler import jit_cache_size
 from repro.serving.bucketing import DoubleBuffer
 from repro.serving.microbatch import ServedQuery, SlaBudgeter, result_exit_reason
 
@@ -200,7 +201,13 @@ class InflightServer:
             now = self.clock()
             self.slot_t_adm[lane] = now
             self.obs.count("admissions", server="inflight")
-            self.obs.observe("budget_postings", budget, server="inflight")
+            if budget >= INT32_MAX:
+                # Unlimited (inf-SLA) admissions would pin the histogram's
+                # p50 at the INT32_MAX sentinel; count them separately and
+                # keep the budget distribution finite-only (ISSUE 9).
+                self.obs.count("unlimited_admissions", server="inflight")
+            else:
+                self.obs.observe("budget_postings", budget, server="inflight")
             self.obs.trace_span(rid, "queue", t_enq, now)
             self.obs.trace_attr(rid, budget_postings=budget, slot=lane)
 
@@ -232,6 +239,9 @@ class InflightServer:
         front = self.buffers.front
         eng = self.engine
 
+        prof = self.obs.profiler if self.obs.enabled else None
+        if prof is not None:
+            cache0 = jit_cache_size(batched_traverse_resume)
         t0 = self.clock()
         blk, rest, order, bounds, budget, maxr = front.device_arrays()
         out = batched_traverse_resume(
@@ -252,14 +262,34 @@ class InflightServer:
         )
         self.compiled_shapes.add((self.n_slots, front.width))
         self.steps_run += 1
+        if prof is not None:
+            t_disp1 = self.clock()
 
         # Async dispatch: the device is scoring; overlap host-side planning
         # for the admissions this step's exits will make room for.
         self._plan_lookahead(self.n_slots)
 
+        if prof is not None:
+            # Timing-only sync: splits the device wait out of the carry
+            # fetch below. Results are untouched.
+            t_plan1 = self.clock()
+            jax.block_until_ready(out)
+            t_dev1 = self.clock()
         self.carry = _carry_to_host(out)  # blocks until the quantum lands
         t1 = self.clock()
         step_ms = (t1 - t0) * 1e3
+        if prof is not None:
+            prof.record_dispatch(
+                "inflight",
+                (self.n_slots, front.width),
+                cache_before=cache0,
+                cache_after=jit_cache_size(batched_traverse_resume),
+                plan_ms=(t_plan1 - t_disp1) * 1e3,
+                dispatch_ms=(t_disp1 - t0) * 1e3,
+                device_ms=(t_dev1 - t_plan1) * 1e3,
+                transfer_ms=(t1 - t_dev1) * 1e3,
+            )
+            prof.record_hbm_once("inflight", eng.dix._asdict())
 
         active = self.slot_rid >= 0
         postings = np.asarray(self.carry.state.postings, dtype=np.int64)
@@ -275,6 +305,7 @@ class InflightServer:
                 "slot_occupancy", float(active.sum()) / self.n_slots,
                 server="inflight",
             )
+            obs.gauge("queue_depth", float(self.pending), server="inflight")
             for lane in np.nonzero(active)[0]:
                 # Device-step attribution: the quantum's host-observed wall
                 # time, shared by every lane riding this dispatch.

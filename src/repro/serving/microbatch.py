@@ -28,7 +28,7 @@ import numpy as np
 from repro.core.anytime import Reactive
 from repro.core.clustered_index import BLOCK
 from repro.obs import NOOP
-from repro.serving.batch_engine import BatchEngine, BatchResult
+from repro.serving.batch_engine import INT32_MAX, BatchEngine, BatchResult
 
 __all__ = ["SlaBudgeter", "ShardedSlaBudgeter", "ServedQuery", "MicroBatchServer"]
 
@@ -377,6 +377,7 @@ class MicroBatchServer:
         obs = self.obs
         obs.observe("batch_size", len(served), server="micro")
         obs.observe("batch_ms", batch_ms, server="micro")
+        obs.gauge("queue_depth", float(len(self._queue)), server="micro")
         per_q = np.asarray(budgets, np.int64)
         if per_q.ndim == 2:  # sharded budgeter: [n, S] -> per-query totals
             per_q = per_q.sum(axis=1)
@@ -385,7 +386,12 @@ class MicroBatchServer:
             reason = result_exit_reason(sq.result)
             obs.count("served_queries", server="micro", reason=reason)
             obs.observe("latency_ms", sq.latency_ms, server="micro")
-            obs.observe("budget_postings", int(bq), server="micro")
+            if int(bq) >= INT32_MAX:
+                # Inf-SLA sentinel budgets stay out of the histogram — they
+                # would pin p50 at ~1.6e9 (ISSUE 9); count them instead.
+                obs.count("unlimited_admissions", server="micro")
+            else:
+                obs.observe("budget_postings", int(bq), server="micro")
             obs.trace_span(sq.rid, "queue", t_enq, t_cut)
             obs.trace_span(sq.rid, "plan", t_cut, t_planned, batch=len(served))
             obs.trace_span(

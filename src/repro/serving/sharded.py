@@ -54,6 +54,7 @@ from repro.core.range_daat import (
     pack_impacts,
 )
 from repro.distributed.sharding import retrieval_mesh, shard_map
+from repro.obs.profiler import jit_cache_size
 from repro.serving.bucketing import (
     BucketSpec,
     batch_ladder,
@@ -583,6 +584,9 @@ class ShardedEngine:
         safe_stop: bool = True, prune_blocks: bool = True,
     ):
         """Run one (batch x shard) step; inputs are stacked numpy tables."""
+        prof = self.obs.profiler if self.obs.enabled else None
+        if prof is not None:
+            t_plan0 = self.obs.clock()
         args = (
             self.dix,
             self.doc_base,
@@ -607,17 +611,40 @@ class ShardedEngine:
                     interpret=self.interpret,
                     docs_format=self.docs_format,
                 )
-            return self._mesh_fns[key](*args)
-        return sharded_batched_traverse(
-            *args,
-            s_pad=self.s_pad,
-            k=self.k,
-            safe_stop=safe_stop,
-            prune_blocks=prune_blocks,
-            impl=self.impl,
-            interpret=self.interpret,
-            docs_format=self.docs_format,
+            fn = self._mesh_fns[key]
+            kwargs = {}
+        else:
+            fn = sharded_batched_traverse
+            kwargs = dict(
+                s_pad=self.s_pad,
+                k=self.k,
+                safe_stop=safe_stop,
+                prune_blocks=prune_blocks,
+                impl=self.impl,
+                interpret=self.interpret,
+                docs_format=self.docs_format,
+            )
+        if prof is None:
+            return fn(*args, **kwargs)
+        clk = self.obs.clock
+        cache0 = jit_cache_size(fn)
+        t_disp0 = clk()
+        out = fn(*args, **kwargs)
+        t_dev0 = clk()
+        # Timing-only sync: results are fetched by the caller; untouched.
+        jax.block_until_ready(out)
+        t_dev1 = clk()
+        prof.record_dispatch(
+            "sharded",
+            (int(np.asarray(blk).shape[0]), int(np.asarray(blk).shape[-1])),
+            cache_before=cache0,
+            cache_after=jit_cache_size(fn),
+            plan_ms=(t_disp0 - t_plan0) * 1e3,
+            dispatch_ms=(t_dev0 - t_disp0) * 1e3,
+            device_ms=(t_dev1 - t_dev0) * 1e3,
         )
+        prof.record_hbm_once("sharded", self.dix._asdict())
+        return out
 
     # ------------------------------------------------------------ execution
     def traverse(

@@ -313,7 +313,11 @@ def test_instrumented_serving_is_bitwise_identical(tmp_path, mode):
 
     for cap in budgets:
         path = str(tmp_path / f"{mode}-{cap}.jsonl")
-        obs = Instrumentation.make(sample_rate=1.0, trace_path=path)
+        # profile=True: the dispatch profiler's extra sync points are
+        # timing-only, so identity must hold with it attached too (§14).
+        obs = Instrumentation.make(
+            sample_rate=1.0, trace_path=path, profile=True
+        )
         instrumented = serve(obs, cap)
         obs.close()
         baseline = serve(NOOP, cap)
@@ -445,3 +449,345 @@ def test_control_plane_health_and_serving_telemetry():
     )
     # Down-shard serving surfaced inexactness in the fidelity telemetry.
     assert obs.metrics.counter("sharded_exact").value(exact=False) >= 1
+
+
+# --------------------------------------------------------------------------
+# ISSUE 9 / DESIGN.md §14: help catalog, profiler, SLOs, detectors, ops loop
+# --------------------------------------------------------------------------
+
+
+def test_every_registered_metric_carries_help():
+    """Drive every serving layer through one handle: no empty help strings."""
+    from repro.control import ControlPlane
+    from repro.obs.slo import SloTracker, default_serving_slos
+
+    eng, queries = _small_setup(seed=10, n_ranges=8)
+    obs = Instrumentation.make(sample_rate=1.0, profile=True)
+    plane = ControlPlane(eng, n_shards=2, use_mesh=False, obs=obs)
+    plane.replay(queries[:8], batch_size=4)
+    srv = InflightServer(
+        BatchEngine(eng, BucketSpec(max_batch=4)),
+        SlaBudgeter(sla_ms=float("inf"), obs=obs),
+        n_slots=4,
+        obs=obs,
+    )
+    for q in queries[:4]:
+        srv.submit(q)
+    srv.run_until_idle()
+    tracker = SloTracker(obs, default_serving_slos(sla_ms=5.0))
+    tracker.sample(now=0.0)
+    tracker.evaluate(now=1.0)
+    assert obs.metrics.missing_help() == []
+    text = prometheus_text(obs.metrics)
+    assert "# HELP latency_ms" in text
+    assert "# HELP served_queries" in text
+    assert "# HELP profiler_dispatches" in text
+
+
+def test_unlimited_budget_sentinel_stays_out_of_histogram():
+    """INT32_MAX admissions count separately; finite budgets histogram."""
+    eng, queries = _small_setup(seed=13, n_ranges=6)
+
+    obs = Instrumentation.make(sample_rate=1.0)
+    srv = InflightServer(
+        BatchEngine(eng, BucketSpec(max_batch=4)),
+        SlaBudgeter(sla_ms=float("inf"), obs=obs),
+        n_slots=4,
+        obs=obs,
+    )
+    for q in queries:
+        srv.submit(q)
+    srv.run_until_idle()
+    assert obs.metrics.histogram("budget_postings").count(server="inflight") == 0
+    unl = obs.metrics.counter("unlimited_admissions").value(server="inflight")
+    adm = obs.metrics.counter("admissions").value(server="inflight")
+    assert unl == adm == len(queries)
+
+    obs2 = Instrumentation.make(sample_rate=1.0)
+    bud = SlaBudgeter(sla_ms=float("inf"), obs=obs2)
+    bud.budgets = lambda n, plans=None: np.full(n, 800, np.int32)
+    srv2 = MicroBatchServer(
+        BatchEngine(eng, BucketSpec(max_batch=4)), bud, max_batch=4, obs=obs2
+    )
+    for q in queries:
+        srv2.submit(q)
+    while srv2.pending:
+        srv2.drain_once()
+    h2 = obs2.metrics.histogram("budget_postings")
+    assert h2.count(server="micro") == len(queries)
+    assert h2.percentile(50.0, server="micro") <= 1024.0  # real budgets, not 2^31
+    assert obs2.metrics.counter("unlimited_admissions").value(server="micro") == 0
+
+
+def test_cdf_below_bucket_edges():
+    from repro.obs.slo import cdf_below
+
+    buckets = [0] * N_BUCKETS
+    buckets[bucket_index(5.0)] = 8  # [4, 8)
+    assert cdf_below(buckets, 8.0) == pytest.approx(8.0)  # edge is exact
+    assert cdf_below(buckets, 4.0) == pytest.approx(0.0)
+    assert cdf_below(buckets, 6.0) == pytest.approx(4.0)  # interpolated
+    assert cdf_below(buckets, -1.0) == 0.0
+    over = [0] * N_BUCKETS
+    over[N_BUCKETS - 1] = 3  # overflow bucket
+    assert cdf_below(over, 1e18) == 0.0  # no interpolable mass
+    assert cdf_below(over, float("inf")) == pytest.approx(3.0)
+
+
+def test_slo_tracker_windowed_burn_hand_computed():
+    """Two windows, hand-placed events: burn = (1 - a) / (1 - objective)."""
+    from repro.obs.slo import HistogramBelow, SloSpec, SloTracker
+
+    obs = Instrumentation()
+    tracker = SloTracker(
+        obs,
+        [SloSpec("lat", 0.9, HistogramBelow("latency_ms", 8.0))],
+        windows={"10s": 10.0, "100s": 100.0},
+    )
+    tracker.sample(now=0.0)
+    for _ in range(6):
+        obs.observe("latency_ms", 3.0)  # good: whole bucket under 8.0
+    tracker.sample(now=50.0)
+    for _ in range(4):
+        obs.observe("latency_ms", 100.0)  # bad
+    tracker.sample(now=100.0)
+    rep = tracker.evaluate(now=100.0)["lat"]
+    w10, w100 = rep["windows"]["10s"], rep["windows"]["100s"]
+    # 10s window sees only the 4 bad events: attainment 0, burn 1/0.1.
+    assert w10["total"] == pytest.approx(4.0)
+    assert w10["attainment"] == pytest.approx(0.0)
+    assert w10["burn"] == pytest.approx(10.0)
+    # 100s window sees all 10: attainment 0.6, burn 0.4/0.1.
+    assert w100["total"] == pytest.approx(10.0)
+    assert w100["attainment"] == pytest.approx(0.6)
+    assert w100["burn"] == pytest.approx(4.0)
+    assert rep["budget_remaining"] == 0.0  # long burn 4.0 >= 1
+    # Evaluate mirrored the report into slo_* gauges.
+    g = obs.metrics.gauge("slo_burn_rate")
+    assert g.value(slo="lat", window="10s") == pytest.approx(10.0)
+    assert obs.metrics.gauge("slo_state").value(slo="lat") == 0  # ok
+
+
+def test_ewma_detector_fire_clear_hysteresis():
+    from repro.obs.detect import EwmaDetector
+
+    det = EwmaDetector(
+        "sig", patience=3, clear_patience=2, min_samples=4, direction="above"
+    )
+    clock = FakeClock(dt=1.0)
+    for _ in range(6):  # warm-up + settled baseline
+        assert det.update(10.0, clock()) is None
+    assert det.mean == pytest.approx(10.0)
+    got = [det.update(100.0, clock()) for _ in range(3)]
+    assert got[0] is None and got[1] is None  # patience absorbs two spikes
+    assert got[2] is not None and got[2].state == "fire"
+    assert det.firing
+    assert det.mean == pytest.approx(10.0)  # baseline frozen, not chasing
+    back = [det.update(10.0, clock()) for _ in range(2)]
+    assert back[0] is None
+    assert back[1] is not None and back[1].state == "clear"
+    assert not det.firing
+    # A lone spike after clearing neither fires nor shifts the baseline much.
+    assert det.update(100.0, clock()) is None
+    assert det.mean < 20.0
+
+
+def test_threshold_detector_and_monitor_emit_to_sink(tmp_path):
+    from repro.obs.detect import DriftMonitor, ThresholdDetector
+
+    path = str(tmp_path / "t.jsonl")
+    obs = Instrumentation.make(
+        sample_rate=1.0, trace_path=path, clock=FakeClock(dt=1.0)
+    )
+    mon = DriftMonitor(obs)
+    sig = {"v": 0.5}
+    mon.add(
+        ThresholdDetector("skew", 2.0, patience=2, clear_patience=1),
+        lambda reg: sig["v"],
+    )
+    seen = []
+    mon.subscribe(lambda ev: seen.append((ev.detector, ev.state)))
+    assert mon.poll() == []
+    sig["v"] = 3.0
+    assert mon.poll() == []  # patience
+    fired = mon.poll()
+    assert [e.state for e in fired] == ["fire"]
+    assert mon.firing() == ["skew"]
+    sig["v"] = 1.0
+    assert [e.state for e in mon.poll()] == ["clear"]
+    assert seen == [("skew", "fire"), ("skew", "clear")]
+    assert obs.metrics.counter("alerts").value(detector="skew", state="fire") == 1
+    obs.close()
+    recs = read_traces(path)
+    alerts = [r for r in recs if r.get("kind") == "alert"]
+    assert [a["state"] for a in alerts] == ["fire", "clear"]
+    # Alert records do not pollute the query-report math.
+    assert summarize(recs)["queries"] == 0
+    assert summarize(recs)["alerts"] == 2
+
+
+def test_profiler_compile_recompile_classification():
+    from repro.obs.profiler import Profiler
+
+    obs = Instrumentation()
+    prof = Profiler(obs)
+    prof.record_dispatch("s", (4, 32), cache_before=0, cache_after=1)  # compile
+    prof.record_dispatch("s", (4, 32), cache_before=1, cache_after=1)  # warm hit
+    prof.record_dispatch("s", (4, 32), cache_before=1, cache_after=2)  # RECOMPILE
+    prof.record_dispatch("s", (8, 32), cache_before=2, cache_after=3)  # compile
+    prof.record_dispatch("s", (8, 64))  # no introspection: novelty fallback
+    prof.record_dispatch("s", (8, 64))  # seen + no introspection: nothing
+    snap = prof.snapshot()["s"]
+    assert snap["dispatches"] == 6
+    assert snap["compiles"] == 3
+    assert snap["recompiles"] == 1
+    assert prof.recompiles() == 1
+    c = obs.metrics.counter("profiler_recompiles")
+    assert c.value(site="s") == 1
+
+
+def test_profiler_tracks_bucket_ladder_without_recompiles():
+    """Across the pow2 ladder: one compile per program, zero recompiles."""
+    # k=7 is unique to this test, so the module-level jit cache has no
+    # warm entries for these programs and every first-seen shape compiles.
+    eng, queries = _small_setup(seed=12, n_ranges=6, k=7)
+    obs = Instrumentation.make(sample_rate=1.0, profile=True)
+    beng = BatchEngine(eng, BucketSpec(max_batch=4), obs=obs)
+    plans = beng.plan_many(queries)
+    for chunk in (plans[:1], plans[:3], plans):  # batch buckets 1, 4, 4x3
+        beng.run_batch(chunk)
+    snap = obs.profiler.snapshot()["batch_engine"]
+    assert snap["recompiles"] == 0
+    assert snap["dispatches"] == beng.batches_run
+    assert {tuple(s) for s in snap["shapes"]} == beng.compiled_shapes
+    assert snap["compiles"] == len(beng.compiled_shapes)
+    assert snap["device_ms"] > 0.0
+    assert snap["hbm_total_bytes"] > 0
+    # A second pass over warm programs adds dispatches, never compiles.
+    beng.run_batch(plans)
+    snap2 = obs.profiler.snapshot()["batch_engine"]
+    assert snap2["dispatches"] > snap["dispatches"]
+    assert snap2["compiles"] == snap["compiles"]
+    assert snap2["recompiles"] == 0
+
+
+def test_planted_shard_skew_arms_reshard_via_alert(tmp_path):
+    """Detector -> ControlPlane arming, end-to-end through real serving."""
+    from repro.control import ControlPlane
+    from repro.obs.detect import DriftMonitor, ShardSkewProbe, ThresholdDetector
+
+    eng, queries = _small_setup(seed=11, n_ranges=8, n_queries=24)
+    path = str(tmp_path / "trace.jsonl")
+    obs = Instrumentation.make(sample_rate=1.0, trace_path=path)
+    plane = ControlPlane(
+        eng, n_shards=2, use_mesh=False, obs=obs, reshard_trigger=1.02
+    )
+    # Plant the skew: dry-run the log on an uninstrumented twin engine,
+    # then replay the single most shard-skewed query so one shard eats
+    # the workload on every consecutive drain.
+    twin = ShardedEngine(Engine(eng.index, k=5), n_shards=2, use_mesh=False)
+    ratio = []
+    for q in queries:
+        p = np.asarray(
+            twin.traverse(twin.engine.plan(q)).shard_postings, np.float64
+        )
+        ratio.append(p.max() * 2.0 / max(p.sum(), 1.0))
+    hot = queries[int(np.argmax(ratio))]
+    assert max(ratio) >= 1.5  # the plant is a real, strong skew
+
+    monitor = DriftMonitor(obs)
+    monitor.add(
+        ThresholdDetector("shard_skew", 1.3, patience=2), ShardSkewProbe(2)
+    )
+    plane.enable_operations(monitor=monitor)
+    for _ in range(16):
+        plane.submit(hot)
+        plane.drain_once()
+    while plane.pending or plane.reshard_task is not None:
+        plane.drain_once()
+
+    fires = obs.metrics.counter("alerts").value(
+        detector="shard_skew", state="fire"
+    )
+    assert fires >= 1
+    # The sustained alert armed the planner's reshard path.
+    assert plane.reshards_completed >= 1
+    assert obs.metrics.counter("reshard_started").total() >= 1
+    obs.close()
+    alerts = [r for r in read_traces(path) if r.get("kind") == "alert"]
+    assert any(
+        a["detector"] == "shard_skew" and a["state"] == "fire" for a in alerts
+    )
+
+
+def test_burn_rate_alert_marks_plane_degraded():
+    """Impossible latency SLO -> fast burn -> degraded-SLO plane state."""
+    from repro.control import ControlPlane
+    from repro.obs.detect import DriftMonitor, ThresholdDetector, gauge_probe
+    from repro.obs.slo import SloTracker, default_serving_slos
+
+    eng, queries = _small_setup(seed=14, n_ranges=8)
+    obs = Instrumentation.make(sample_rate=1.0)
+    plane = ControlPlane(eng, n_shards=2, use_mesh=False, obs=obs)
+    tracker = SloTracker(obs, default_serving_slos(sla_ms=1e-4))
+    monitor = DriftMonitor(obs)
+    monitor.add(
+        ThresholdDetector("slo_fast_burn", 14.4, patience=2),
+        gauge_probe("slo_burn_rate", slo="latency_sla", window="5m"),
+    )
+    plane.enable_operations(slos=tracker, monitor=monitor)
+    plane.replay(queries, batch_size=4)
+    assert plane.stats()["degraded_slo"] is True
+    assert "slo_fast_burn" in monitor.firing()
+    assert obs.metrics.gauge("plane_degraded_slo").value() == 1.0
+    assert obs.metrics.gauge("slo_state").value(slo="latency_sla") == 2
+
+
+def test_slo_cli(tmp_path, capsys):
+    from repro.obs.__main__ import main
+
+    path = str(tmp_path / "t.jsonl")
+    tr = Tracer(sample_rate=1.0, sink=TraceSink(path))
+    clock = FakeClock(dt=0.01)
+    for rid in range(8):
+        tr.begin(rid)
+        t = tr.get(rid)
+        t0 = clock()
+        lat = 2.0 if rid < 6 else 50.0
+        t.span("service", t0, t0 + lat / 1e3)
+        t.attrs.update(
+            exit_reason="safe", latency_ms=lat, sla_ms=10.0, exact=True
+        )
+        tr.end(rid)
+    tr.close()
+    assert main(["slo", path]) == 0
+    out = capsys.readouterr().out
+    assert "latency_sla" in out and "burn" in out
+    assert main(["slo", path, "--json", "--windows", "w=1"]) == 0
+    rep = json.loads(capsys.readouterr().out)
+    assert rep["queries"] == 8
+    assert rep["sla_ms"] == 10.0  # recovered from the recorded attribute
+    assert rep["slos"]["latency_sla"]["attainment"] == pytest.approx(0.75)
+    assert main(["slo", str(tmp_path / "missing.jsonl")]) == 1
+
+
+def test_watch_cli(tmp_path, capsys):
+    from repro.obs import write_snapshot
+    from repro.obs.__main__ import main
+
+    obs = Instrumentation.make(sample_rate=1.0)
+    obs.count("served_queries", 5, server="micro", reason="safe")
+    obs.observe("latency_ms", 3.0, server="micro")
+    obs.gauge("queue_depth", 2.0, server="micro")
+    snap = str(tmp_path / "snap.json")
+    write_snapshot(
+        snap,
+        obs.metrics,
+        alerts=[{"detector": "skew", "state": "fire", "value": 2.5, "t_ms": 1.0}],
+        t=12.5,
+    )
+    assert main(["watch", snap, "--once"]) == 0
+    out = capsys.readouterr().out
+    assert "served_queries" in out and "latency_ms" in out
+    assert "skew" in out  # the alert tail rendered
+    assert main(["watch", str(tmp_path / "missing.json"), "--once"]) == 1
