@@ -19,6 +19,10 @@ fresh run's own id excluded):
   * **metric-schema drift** — a metric name that the previous run's
     registry exported but the fresh run's does not means a dashboard or
     alert silently went dark; always fails, any preset.
+  * **static-hazard findings** — each run records the ``repro.analysis``
+    finding count (DESIGN.md §15); a count above the most recent
+    historical run means new un-baselined lint debt landed. Always
+    fails, any preset — the ratchet only tightens.
 
 No history (first run on a branch, fresh clone) exits 0: the gate needs
 a baseline before it can gate.
@@ -125,6 +129,26 @@ def gate(
             hard.append(
                 f"{name}: {recompiles} jit recompile(s) on already-seen "
                 f"shapes — a leaked non-static argument or dtype drift"
+            )
+
+    fresh_static = fresh.get("static_findings")
+    prev_static = next(
+        (
+            e["static_findings"]
+            for e in reversed(history)
+            if e.get("static_findings") is not None
+        ),
+        None,
+    )
+    if fresh_static is not None and prev_static is not None:
+        cur_n = int(fresh_static.get("count", 0))
+        prev_n = int(prev_static.get("count", 0))
+        if cur_n > prev_n:
+            hard.append(
+                f"static_findings: {cur_n} repro.analysis finding(s) vs "
+                f"{prev_n} in the last recorded run — new static-hazard "
+                f"debt; fix it or ratchet analysis_baseline.json "
+                f"consciously (by_rule: {fresh_static.get('by_rule')})"
             )
 
     prev_obs = next(

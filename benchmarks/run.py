@@ -225,8 +225,29 @@ def _obs_compact(metrics: dict | None) -> dict:
     return out
 
 
+def _static_findings(root: str) -> dict | None:
+    """Static-hazard finding counts for this run's trajectory record.
+
+    Sourced from ``repro.analysis`` (DESIGN.md §15) so perf_gate can fail
+    a run whose finding count *rose* against history — the lint ratchet's
+    CI twin. Analyzer unavailable (trimmed checkout) -> record nothing.
+    """
+    try:
+        from repro.analysis import count_findings
+    except ImportError:
+        return None
+    try:
+        return count_findings(os.path.join(root, "src", "repro"))
+    except (OSError, SyntaxError):
+        return None
+
+
 def append_trajectory(
-    rid: str, headlines: dict, failures: list, metrics: dict | None = None
+    rid: str,
+    headlines: dict,
+    failures: list,
+    metrics: dict | None = None,
+    static_findings: dict | None = None,
 ) -> str:
     """Append one compact run record to the git-tracked trajectory log.
 
@@ -252,6 +273,8 @@ def append_trajectory(
     obs = _obs_compact(metrics)
     if obs:
         entry["obs"] = obs
+    if static_findings is not None:
+        entry["static_findings"] = static_findings
     lines = []
     if os.path.exists(TRAJECTORY):
         with open(TRAJECTORY, encoding="utf-8") as f:
@@ -278,9 +301,14 @@ def write_headline_file(
     }
     if metrics:
         payload["metrics"] = metrics
+    findings = _static_findings(root)
+    if findings is not None:
+        payload["static_findings"] = findings
     with open(path, "w", encoding="utf-8") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
-    append_trajectory(rid, headlines, failures, metrics)
+    append_trajectory(
+        rid, headlines, failures, metrics, static_findings=findings
+    )
     return path
 
 

@@ -1,0 +1,45 @@
+"""repro.analysis — jit/Pallas static-hazard linter (DESIGN.md §15).
+
+AST-based, stdlib-only checkers for the bug classes PR 6 and PR 9 fixed
+after the fact: recompiles from leaked non-static args (RECOMPILE),
+host syncs in dispatch hot loops (HOSTSYNC), unguarded int32 narrowing
+(NARROW), unguarded telemetry in hot paths (OBSGUARD), non-atomic
+artifact writes (ARTIFACT), and Python control flow on Pallas tracers
+(PALLASCONST). Findings ratchet through ``analysis_baseline.json``;
+intentional sites carry ``# analysis: allow[RULE]`` waivers.
+
+CLI: ``python -m repro.analysis {check,baseline,explain}``.
+"""
+
+from repro.analysis.model import Finding, Project, SourceFile
+from repro.analysis.registry import RULES, Rule, help_for, missing_help, rule
+from repro.analysis import checkers  # noqa: F401  (registers the rules)
+from repro.analysis.baseline import (
+    diff_baseline,
+    load_baseline,
+    write_baseline,
+)
+from repro.analysis.runner import (
+    AnalysisReport,
+    analyze_paths,
+    analyze_source,
+    count_findings,
+)
+
+__all__ = [
+    "AnalysisReport",
+    "Finding",
+    "Project",
+    "RULES",
+    "Rule",
+    "SourceFile",
+    "analyze_paths",
+    "analyze_source",
+    "count_findings",
+    "diff_baseline",
+    "help_for",
+    "load_baseline",
+    "missing_help",
+    "rule",
+    "write_baseline",
+]

@@ -1,0 +1,978 @@
+"""The six repo-specific hazard checkers (DESIGN.md §15).
+
+Every rule here encodes a bug class this repo has actually shipped and
+later fixed at runtime cost:
+
+* PR 6 fixed an int64 -> int32 bounds wrap that silently disabled safe
+  termination (NARROW) and a budgeter judging device time instead of
+  end-to-end latency.
+* PR 9 built a profiler that catches recompiles (leaked non-static args,
+  RECOMPILE) and unguarded instrumentation overhead (OBSGUARD) — but
+  only at runtime, after the regression is serving traffic.
+
+The checkers are deliberately heuristic: they pattern-match the repo's
+own idioms (``static_argnames`` partial-jit, ``saturate_bounds`` guards,
+``if obs.enabled`` gating, staged-tmp + ``os.replace`` publishes) rather
+than attempting whole-program dataflow. False positives are handled by
+inline ``# analysis: allow[RULE]`` waivers; residual debt lives in the
+committed ``analysis_baseline.json`` ratchet.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+
+from repro.analysis.model import Finding, Project, SourceFile
+from repro.analysis.registry import rule
+
+__all__ = ["DRAIN_BOUNDARIES", "HOT_ROOTS"]
+
+# --------------------------------------------------------------- helpers
+
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
+STATIC_FNS = {"len", "isinstance"}
+
+
+def _dotted(node: ast.AST) -> str | None:
+    """``a.b.c`` for Name/Attribute chains, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _stmt_of(node: ast.AST) -> ast.stmt:
+    while not isinstance(node, ast.stmt):
+        node = node.parent  # type: ignore[attr-defined]
+    return node
+
+
+def _func_of(node: ast.AST):
+    cur = getattr(node, "parent", None)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return cur
+        cur = getattr(cur, "parent", None)
+    return None
+
+
+def _class_of(node: ast.AST):
+    cur = getattr(node, "parent", None)
+    while cur is not None:
+        if isinstance(cur, ast.ClassDef):
+            return cur
+        cur = getattr(cur, "parent", None)
+    return None
+
+
+def _is_static_use(name: ast.Name, root: ast.AST) -> bool:
+    """True when ``name`` is only used via shape/dtype/len/isinstance —
+    i.e. trace-time-static even for traced values."""
+    cur: ast.AST = name
+    while cur is not root:
+        parent = cur.parent  # type: ignore[attr-defined]
+        if isinstance(parent, ast.Attribute) and parent.attr in STATIC_ATTRS:
+            return True
+        if isinstance(parent, ast.Call) and cur is not parent.func:
+            fn = _dotted(parent.func)
+            if fn in STATIC_FNS:
+                return True
+        cur = parent
+    return False
+
+
+def _value_refs(root: ast.AST, names: set[str]) -> list[str]:
+    """Names from ``names`` referenced at *value* position under ``root``."""
+    hits: list[str] = []
+    for n in ast.walk(root):
+        if (
+            isinstance(n, ast.Name)
+            and n.id in names
+            and not _is_static_use(n, root)
+        ):
+            hits.append(n.id)
+    return hits
+
+
+def _scoped(sf: SourceFile, fragments: tuple[str, ...]) -> bool:
+    return any(f in sf.path for f in fragments)
+
+
+# ---------------------------------------------------- jit-site collection
+
+
+@dataclass
+class JitFn:
+    """A jit-wrapped function: its def (if local), params, static names."""
+
+    name: str
+    node: ast.FunctionDef | None
+    static: set[str] = field(default_factory=set)
+    params: list[str] = field(default_factory=list)
+
+
+_JIT_NAMES = {"jax.jit", "jit"}
+_PARTIAL_NAMES = {"functools.partial", "partial"}
+
+
+def _static_argnames(keywords: list[ast.keyword]) -> set[str]:
+    out: set[str] = set()
+    for kw in keywords:
+        if kw.arg != "static_argnames":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, str):
+            out.add(v.value)
+        elif isinstance(v, (ast.Tuple, ast.List)):
+            out.update(
+                e.value
+                for e in v.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, str)
+            )
+    return out
+
+
+def _params_of(fn: ast.FunctionDef) -> list[str]:
+    names = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+    return [n for n in names if n != "self"]
+
+
+def collect_jits(sf: SourceFile) -> dict[str, JitFn]:
+    """Every jit-wrapped callable defined in this module, by name."""
+    jits: dict[str, JitFn] = {}
+    module_fns = {
+        n.name: n for n in sf.tree.body if isinstance(n, ast.FunctionDef)
+    }
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.FunctionDef):
+            for dec in node.decorator_list:
+                static: set[str] | None = None
+                if _dotted(dec) in _JIT_NAMES:
+                    static = set()
+                elif isinstance(dec, ast.Call):
+                    head = _dotted(dec.func)
+                    if head in _JIT_NAMES:
+                        static = _static_argnames(dec.keywords)
+                    elif (
+                        head in _PARTIAL_NAMES
+                        and dec.args
+                        and _dotted(dec.args[0]) in _JIT_NAMES
+                    ):
+                        static = _static_argnames(dec.keywords)
+                if static is not None:
+                    jits[node.name] = JitFn(
+                        node.name, node, static, _params_of(node)
+                    )
+        elif isinstance(node, ast.Assign) and isinstance(
+            node.value, ast.Call
+        ):
+            # g = jax.jit(f, static_argnames=(...))
+            call = node.value
+            if _dotted(call.func) in _JIT_NAMES and call.args:
+                target = _dotted(call.args[0])
+                inner = module_fns.get(target or "")
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        jits[t.id] = JitFn(
+                            t.id,
+                            inner,
+                            _static_argnames(call.keywords),
+                            _params_of(inner) if inner else [],
+                        )
+    return jits
+
+
+# ------------------------------------------------------------- RECOMPILE
+
+_HELP_RECOMPILE = """\
+Recompile hazards around jit boundaries. Two patterns:
+
+  1. Value-dependent `if`/`while` on a traced (non-static_argnames)
+     parameter inside a jit'd function body. Shape/dtype/len() tests are
+     fine (static at trace time); testing the *value* either fails to
+     trace or silently recompiles per value. Use `lax.cond`/`jnp.where`,
+     or move the flag into `static_argnames`.
+  2. Call sites passing Python strings or tuple/list literals into
+     non-static parameters of a module-local jit'd function: every
+     distinct value compiles a fresh executable.
+
+PR 9's dispatch profiler detects exactly this at runtime ("recompile on
+an already-seen shape = leaked non-static arg, by construction"); this
+rule catches it at review time. Waive with `# analysis: allow[RECOMPILE]`
+when the branch is genuinely trace-time-static."""
+
+
+def _is_py_literal(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return True
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return all(isinstance(e, ast.Constant) for e in node.elts)
+    return False
+
+
+@rule("RECOMPILE", _HELP_RECOMPILE)
+def check_recompile(project: Project) -> list[Finding]:
+    out: list[Finding] = []
+    for sf in project.files:
+        jits = collect_jits(sf)
+        for jf in jits.values():
+            if jf.node is None:
+                continue
+            traced = set(jf.params) - jf.static
+            for sub in ast.walk(jf.node):
+                if not isinstance(sub, (ast.If, ast.While)):
+                    continue
+                hits = _value_refs(sub.test, traced)
+                if hits:
+                    kind = "while" if isinstance(sub, ast.While) else "if"
+                    out.append(
+                        Finding(
+                            "RECOMPILE",
+                            sf.path,
+                            sub.lineno,
+                            sf.scope_of(sub),
+                            f"value-dependent `{kind}` on traced "
+                            f"parameter(s) {sorted(set(hits))} inside "
+                            f"jit'd `{jf.name}` — use lax.cond/jnp.where "
+                            f"or add to static_argnames",
+                            snippet=sf.segment(sub.test),
+                        )
+                    )
+        # Same-module call sites of the jitted functions.
+        for call in ast.walk(sf.tree):
+            if not isinstance(call, ast.Call):
+                continue
+            jf = jits.get(_dotted(call.func) or "")
+            if jf is None:
+                continue
+            bad: list[str] = []
+            for i, a in enumerate(call.args):
+                if i < len(jf.params) and _is_py_literal(a):
+                    if jf.params[i] not in jf.static:
+                        bad.append(jf.params[i])
+            for kw in call.keywords:
+                if kw.arg and kw.arg not in jf.static and _is_py_literal(
+                    kw.value
+                ):
+                    bad.append(kw.arg)
+            if bad:
+                out.append(
+                    Finding(
+                        "RECOMPILE",
+                        sf.path,
+                        call.lineno,
+                        sf.scope_of(call),
+                        f"Python literal passed into non-static "
+                        f"parameter(s) {sorted(set(bad))} of jit'd "
+                        f"`{jf.name}` — every distinct value recompiles; "
+                        f"add to static_argnames",
+                        snippet=sf.segment(call),
+                    )
+                )
+    return out
+
+
+# -------------------------------------------------------------- HOSTSYNC
+
+_HELP_HOSTSYNC = """\
+Host-device synchronization reachable from a serving hot loop. The
+in-flight and micro-batch servers overlap host planning with device
+scoring (DESIGN.md §11); any `jax.block_until_ready`, `jax.device_get`,
+`.item()`, or `np.asarray`/`float()` on a dispatch result inside the
+dispatch path stalls that overlap and serializes the quantum.
+
+Detection: an intra-package call-graph walk from the hot roots
+(InflightServer.step, MicroBatchServer.drain_once, BatchEngine.run_batch,
+ShardedEngine.dispatch, ControlPlane.drain_once, ReplicaGroupEngine.dispatch,
+...). Known drain boundaries (_carry_to_host, lane_result, _to_results) are
+allowlisted — results must land on the host *somewhere*; the rule polices
+where. Syncs inside `for`/`while` loops anywhere in the tree (e.g. a
+training step loop) are also flagged.
+
+Fix by slicing/reducing on-device and deferring the host copy to the
+drain boundary. Intentional syncs (profiler timing fences, step-boundary
+metrics) get `# analysis: allow[HOSTSYNC]` so the baseline holds only
+real debt."""
+
+HOT_ROOTS = {
+    ("InflightServer", "step"),
+    ("MicroBatchServer", "drain_once"),
+    ("BatchEngine", "run_batch"),
+    ("ShardedBatchEngine", "run_batch"),
+    ("ShardedEngine", "dispatch"),
+    ("ControlPlane", "drain_once"),
+    ("ReplicaGroupEngine", "dispatch"),
+}
+
+DRAIN_BOUNDARIES = {"_carry_to_host", "lane_result", "_to_results"}
+
+_SYNC_CALLS = {"jax.block_until_ready", "jax.device_get"}
+_SYNC_ATTRS = {"block_until_ready", "item"}
+_MATERIALIZE = {"np.asarray", "np.array", "numpy.asarray", "numpy.array"}
+_TAINT_SRC = re.compile(r"(traverse|dispatch|run_batch|resume|_fns\[)")
+
+
+def _module_name(path: str) -> str:
+    p = path.replace("\\", "/")
+    if "src/" in p:
+        p = p.split("src/", 1)[1]
+    return p[:-3].replace("/", ".") if p.endswith(".py") else p
+
+
+def _import_map(sf: SourceFile) -> dict[str, tuple[str, str]]:
+    """local name -> (module, original name) for from-imports."""
+    mod_parts = _module_name(sf.path).split(".")
+    out: dict[str, tuple[str, str]] = {}
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.ImportFrom):
+            continue
+        if node.level:
+            base = mod_parts[: -node.level]
+            target = ".".join(base + (node.module or "").split("."))
+        else:
+            target = node.module or ""
+        for alias in node.names:
+            out[alias.asname or alias.name] = (target, alias.name)
+    return out
+
+
+@dataclass
+class _DefIndex:
+    """Project-wide (module, class, function) -> def node index."""
+
+    defs: dict[tuple[str, str | None, str], tuple[SourceFile, ast.AST]] = (
+        field(default_factory=dict)
+    )
+    modules: dict[str, SourceFile] = field(default_factory=dict)
+    imports: dict[str, dict[str, tuple[str, str]]] = field(
+        default_factory=dict
+    )
+
+
+def _index_defs(project: Project) -> _DefIndex:
+    ix = _DefIndex()
+    for sf in project.files:
+        mod = _module_name(sf.path)
+        ix.modules[mod] = sf
+        ix.imports[mod] = _import_map(sf)
+        for node in sf.tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                ix.defs[(mod, None, node.name)] = (sf, node)
+            elif isinstance(node, ast.ClassDef):
+                for sub in node.body:
+                    if isinstance(
+                        sub, (ast.FunctionDef, ast.AsyncFunctionDef)
+                    ):
+                        ix.defs[(mod, node.name, sub.name)] = (sf, sub)
+    return ix
+
+
+def _edges(ix: _DefIndex, mod: str, cls: str | None, fnode) -> list[tuple]:
+    """Resolvable callees: self-methods, module functions, from-imports."""
+    out = []
+    for call in ast.walk(fnode):
+        if not isinstance(call, ast.Call):
+            continue
+        f = call.func
+        if (
+            isinstance(f, ast.Attribute)
+            and isinstance(f.value, ast.Name)
+            and f.value.id == "self"
+            and cls is not None
+            and (mod, cls, f.attr) in ix.defs
+        ):
+            out.append((mod, cls, f.attr))
+        elif isinstance(f, ast.Name):
+            if (mod, None, f.id) in ix.defs:
+                out.append((mod, None, f.id))
+            else:
+                imp = ix.imports.get(mod, {}).get(f.id)
+                if imp and (imp[0], None, imp[1]) in ix.defs:
+                    out.append((imp[0], None, imp[1]))
+    return out
+
+
+def _taint_sets(sf: SourceFile, fnode) -> tuple[set[str], set[str]]:
+    """(tainted data names, tainted callable names) for one function.
+
+    Data taint: locals assigned from dispatch-shaped calls (name matches
+    traverse/dispatch/run_batch/resume or a compiled-fn table lookup like
+    ``self._mesh_fns[key]``). Callable taint: locals *bound to* such a
+    callable; calls through them taint their targets too. Comprehension
+    targets iterating a tainted name inherit the taint."""
+    data: set[str] = set()
+    fns: set[str] = set()
+    for _ in range(3):  # tiny fixpoint: assignments are not in SSA order
+        for node in ast.walk(fnode):
+            if isinstance(node, ast.Assign):
+                targets = [
+                    t.id for t in node.targets if isinstance(t, ast.Name)
+                ]
+                for t in node.targets:
+                    if isinstance(t, ast.Tuple):
+                        targets += [
+                            e.id for e in t.elts if isinstance(e, ast.Name)
+                        ]
+                if not targets:
+                    continue
+                v = node.value
+                if isinstance(v, ast.Call):
+                    fsrc = sf.segment(v.func)
+                    fname = _dotted(v.func)
+                    if _TAINT_SRC.search(fsrc) or (fname in fns):
+                        data.update(targets)
+                else:
+                    if _TAINT_SRC.search(sf.segment(v)):
+                        fns.update(targets)
+            elif isinstance(
+                node, (ast.GeneratorExp, ast.ListComp, ast.SetComp)
+            ):
+                for gen in node.generators:
+                    if isinstance(gen.iter, ast.Name) and gen.iter.id in data:
+                        if isinstance(gen.target, ast.Name):
+                            data.add(gen.target.id)
+    return data, fns
+
+
+def _in_loop(node: ast.AST) -> bool:
+    cur = getattr(node, "parent", None)
+    while cur is not None and not isinstance(
+        cur, (ast.FunctionDef, ast.AsyncFunctionDef)
+    ):
+        if isinstance(cur, (ast.For, ast.While)):
+            return True
+        cur = getattr(cur, "parent", None)
+    return False
+
+
+def _sync_kind(call: ast.Call) -> str | None:
+    name = _dotted(call.func)
+    if name in _SYNC_CALLS:
+        return name
+    f = call.func
+    if isinstance(f, ast.Attribute) and f.attr in _SYNC_ATTRS:
+        return f".{f.attr}()"
+    return None
+
+
+@rule("HOSTSYNC", _HELP_HOSTSYNC)
+def check_hostsync(project: Project) -> list[Finding]:
+    ix = _index_defs(project)
+    # BFS the call graph from the hot roots.
+    work = [
+        (key, f"{key[1]}.{key[2]}")
+        for key in ix.defs
+        if (key[1], key[2]) in HOT_ROOTS
+    ]
+    seen = {key for key, _ in work}
+    reachable: list[tuple[tuple, str]] = []
+    while work:
+        key, root = work.pop()
+        reachable.append((key, root))
+        sf, fnode = ix.defs[key]
+        for nxt in _edges(ix, key[0], key[1], fnode):
+            if nxt not in seen:
+                seen.add(nxt)
+                work.append((nxt, root))
+
+    out: list[Finding] = []
+    flagged: set[int] = set()
+    for key, root in reachable:
+        mod, cls, name = key
+        if name in DRAIN_BOUNDARIES:
+            continue
+        sf, fnode = ix.defs[key]
+        data, _fns = _taint_sets(sf, fnode)
+        mat_seen: set[str] = set()
+        for call in ast.walk(fnode):
+            if not isinstance(call, ast.Call):
+                continue
+            kind = _sync_kind(call)
+            if kind is not None:
+                flagged.add(id(call))
+                out.append(
+                    Finding(
+                        "HOSTSYNC",
+                        sf.path,
+                        call.lineno,
+                        sf.scope_of(call),
+                        f"`{kind}` in the dispatch hot path (reached from "
+                        f"{root}) — stalls host/device overlap; move to a "
+                        f"drain boundary or waive if timing-only",
+                        snippet=sf.segment(call),
+                    )
+                )
+                continue
+            fname = _dotted(call.func)
+            if fname in _MATERIALIZE or fname == "float":
+                hit = next(
+                    (
+                        n.id
+                        for a in call.args
+                        for n in ast.walk(a)
+                        if isinstance(n, ast.Name) and n.id in data
+                    ),
+                    None,
+                )
+                if hit is not None and hit not in mat_seen:
+                    mat_seen.add(hit)  # one finding per materialized result
+                    flagged.add(id(call))
+                    out.append(
+                        Finding(
+                            "HOSTSYNC",
+                            sf.path,
+                            call.lineno,
+                            sf.scope_of(call),
+                            f"`{fname}` materializes dispatch result "
+                            f"`{hit}` on the host (reached from {root}) — "
+                            f"slice/reduce on-device, fetch at the drain "
+                            f"boundary",
+                            snippet=sf.segment(call),
+                        )
+                    )
+    # Syncs inside explicit Python loops anywhere (training loops etc.).
+    for sf in project.files:
+        for call in ast.walk(sf.tree):
+            if not isinstance(call, ast.Call) or id(call) in flagged:
+                continue
+            kind = _sync_kind(call)
+            if kind is None or not _in_loop(call):
+                continue
+            fn = _func_of(call)
+            if fn is not None and fn.name in DRAIN_BOUNDARIES:
+                continue
+            out.append(
+                Finding(
+                    "HOSTSYNC",
+                    sf.path,
+                    call.lineno,
+                    sf.scope_of(call),
+                    f"`{kind}` inside a Python loop — one device "
+                    f"round-trip per iteration; batch the fetch or waive "
+                    f"if the sync is the point (step timing)",
+                    snippet=sf.segment(call),
+                )
+            )
+    return out
+
+
+# ---------------------------------------------------------------- NARROW
+
+_HELP_NARROW = """\
+Unguarded narrowing casts on bounds/docid/postings-shaped values. PR 6
+shipped an int64 -> int32 BoundSum wrap that turned huge bounds negative
+and silently disabled safe termination (`bound <= theta` held
+everywhere). The repo idiom is `saturate_bounds` (serving/bucketing.py):
+clip to INT32_MAX with a RuntimeWarning, raise on negative.
+
+Flags `.astype(np.int32)` / `np.int32(x)` where the cast source or its
+assignment target/keyword mentions bound/docid/docs/posting/budget/
+maxdoc and the statement carries no clip/minimum/saturate/checked guard.
+`dtype=np.int32` allocation kwargs are never flagged — fresh buffers
+don't narrow anything. Fix with a saturating or checked cast; waive when
+the value range is structurally proven elsewhere."""
+
+_NARROW_SCOPE = ("core/", "serving/", "index_io/", "control/")
+_WATCH = ("bound", "docid", "doc_id", "docs", "posting", "budget", "maxdoc")
+_GUARD = ("clip", "minimum", "saturate", "checked", "iinfo")
+_INT32 = {"np.int32", "numpy.int32", "jnp.int32"}
+
+
+def _narrow_cast_expr(call: ast.Call) -> ast.AST | None:
+    """The narrowed expression, if ``call`` is an int32 cast."""
+    f = call.func
+    if isinstance(f, ast.Attribute) and f.attr == "astype":
+        targets = [a for a in call.args] + [
+            k.value for k in call.keywords if k.arg == "dtype"
+        ]
+        for t in targets:
+            if _dotted(t) in _INT32 or (
+                isinstance(t, ast.Constant) and t.value == "int32"
+            ):
+                return f.value
+        return None
+    if _dotted(f) in _INT32 and len(call.args) == 1:
+        a = call.args[0]
+        return None if isinstance(a, ast.Constant) else a
+    return None
+
+
+@rule("NARROW", _HELP_NARROW)
+def check_narrow(project: Project) -> list[Finding]:
+    out: list[Finding] = []
+    for sf in project.files:
+        if not _scoped(sf, _NARROW_SCOPE):
+            continue
+        for call in ast.walk(sf.tree):
+            if not isinstance(call, ast.Call):
+                continue
+            expr = _narrow_cast_expr(call)
+            if expr is None:
+                continue
+            names = sf.segment(expr).lower()
+            cur: ast.AST = call
+            while not isinstance(cur, ast.stmt):
+                parent = cur.parent  # type: ignore[attr-defined]
+                if isinstance(parent, ast.keyword) and parent.arg:
+                    names += " " + parent.arg.lower()
+                cur = parent
+            stmt = cur
+            if isinstance(stmt, ast.Assign):
+                names += " " + " ".join(
+                    sf.segment(t).lower() for t in stmt.targets
+                )
+            elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+                names += " " + sf.segment(stmt.target).lower()
+            if not any(w in names for w in _WATCH):
+                continue
+            guard_ctx = sf.segment(stmt).lower() + " " + sf.scope_of(
+                call
+            ).lower()
+            if any(g in guard_ctx for g in _GUARD):
+                continue
+            out.append(
+                Finding(
+                    "NARROW",
+                    sf.path,
+                    call.lineno,
+                    sf.scope_of(call),
+                    "unguarded int32 narrowing on a bounds/docid-shaped "
+                    "value — values past 2^31-1 wrap negative (the PR 6 "
+                    "safe-termination bug); use a saturating or checked "
+                    "cast",
+                    snippet=sf.segment(call),
+                )
+            )
+    return out
+
+
+# -------------------------------------------------------------- OBSGUARD
+
+_HELP_OBSGUARD = """\
+Telemetry calls in serving/control hot paths not dominated by an
+`if obs.enabled` (or `prof is not None`) guard. The PR 8/9 acceptance
+bar is <5% instrumentation overhead with obs *enabled* and bitwise-
+identical results with obs *disabled*; an unguarded `obs.observe`/
+`trace_span` in a drain loop pays dict/format cost per query even when
+telemetry is off (NOOP attribute dispatch is cheap, argument
+construction is not).
+
+A call counts as guarded when an ancestor `if`/ternary mentions
+`.enabled` or `is not None`, or an earlier top-level statement in the
+same function is an `if ... enabled`/`is None` early-return. Fix by
+hoisting the guard (or giving the helper an early return); waive only
+for cold paths that merely live in a serving module."""
+
+_OBS_SCOPE = ("serving/", "control/")
+_OBS_METHODS = {
+    "count",
+    "observe",
+    "gauge",
+    "trace_begin",
+    "trace_span",
+    "trace_attr",
+    "trace_end",
+    "record_dispatch",
+    "record_hbm_once",
+}
+_OBS_RECEIVER = re.compile(r"(^|\.)(obs|prof|profiler|metrics|tracer)$")
+_GUARD_TEST = ("enabled", "is not None", "is None")
+
+
+def _guarded(sf: SourceFile, call: ast.Call) -> bool:
+    cur = getattr(call, "parent", None)
+    while cur is not None and not isinstance(
+        cur, (ast.FunctionDef, ast.AsyncFunctionDef)
+    ):
+        if isinstance(cur, (ast.If, ast.IfExp)):
+            test = sf.segment(cur.test)
+            if any(g in test for g in _GUARD_TEST):
+                return True
+        cur = getattr(cur, "parent", None)
+    fn = cur
+    if fn is None:
+        return False
+    # Early-return guard: `if not obs.enabled: return` before this stmt.
+    top: ast.AST = call
+    while getattr(top, "parent", None) is not fn:
+        top = top.parent  # type: ignore[attr-defined]
+    for stmt in fn.body:
+        if stmt is top:
+            break
+        if isinstance(stmt, ast.If):
+            test = sf.segment(stmt.test)
+            has_return = any(
+                isinstance(s, ast.Return) for s in ast.walk(stmt)
+            )
+            if has_return and any(g in test for g in _GUARD_TEST):
+                return True
+    return False
+
+
+@rule("OBSGUARD", _HELP_OBSGUARD)
+def check_obsguard(project: Project) -> list[Finding]:
+    out: list[Finding] = []
+    for sf in project.files:
+        if not _scoped(sf, _OBS_SCOPE):
+            continue
+        for call in ast.walk(sf.tree):
+            if not isinstance(call, ast.Call):
+                continue
+            f = call.func
+            if not (
+                isinstance(f, ast.Attribute) and f.attr in _OBS_METHODS
+            ):
+                continue
+            receiver = _dotted(f.value)
+            if receiver is None or not _OBS_RECEIVER.search(receiver):
+                continue
+            if _guarded(sf, call):
+                continue
+            out.append(
+                Finding(
+                    "OBSGUARD",
+                    sf.path,
+                    call.lineno,
+                    sf.scope_of(call),
+                    f"`{receiver}.{f.attr}(...)` not dominated by an "
+                    f"`if obs.enabled` guard — pays instrumentation cost "
+                    f"per call even with telemetry off; hoist the guard "
+                    f"or add an early return",
+                    snippet=sf.segment(call),
+                )
+            )
+    return out
+
+
+# -------------------------------------------------------------- ARTIFACT
+
+_HELP_ARTIFACT = """\
+Durable writes without the staged-tmp + rename-aside idiom. The repo's
+publish discipline (index_io/artifact.py, control/journal.py,
+obs/trace.py): build under a unique `*.tmp-*` staging dir, `os.replace`
+into place so readers never observe a half-written artifact; append-mode
+journals fsync per record so a replay never sees a torn tail.
+
+Flags `open(path, "w"/"a")` / `np.save*` in artifact-producing modules
+when the enclosing function (or class) neither replaces/renames nor
+fsyncs, and the path is not itself a tmp-stage. Fix by writing to
+`path + ".tmp"` and `os.replace`-ing; waive for genuinely ephemeral
+output (debug dumps, stdout mirrors)."""
+
+_ART_SCOPE = (
+    "index_io/",
+    "control/",
+    "obs/",
+    "launch/",
+    "train/",
+    "serving/",
+)
+_NP_WRITERS = {
+    "np.save",
+    "np.savez",
+    "np.savez_compressed",
+    "np.savetxt",
+    "numpy.save",
+    "numpy.savez",
+}
+
+
+def _write_mode(call: ast.Call) -> str | None:
+    mode = None
+    if len(call.args) >= 2 and isinstance(call.args[1], ast.Constant):
+        mode = call.args[1].value
+    for kw in call.keywords:
+        if kw.arg == "mode" and isinstance(kw.value, ast.Constant):
+            mode = kw.value.value
+    if isinstance(mode, str) and any(c in mode for c in "wax"):
+        return mode
+    return None
+
+
+@rule("ARTIFACT", _HELP_ARTIFACT)
+def check_artifact(project: Project) -> list[Finding]:
+    out: list[Finding] = []
+    for sf in project.files:
+        if not _scoped(sf, _ART_SCOPE):
+            continue
+        for call in ast.walk(sf.tree):
+            if not isinstance(call, ast.Call):
+                continue
+            name = _dotted(call.func)
+            if name == "open":
+                mode = _write_mode(call)
+                if mode is None:
+                    continue
+            elif name in _NP_WRITERS:
+                mode = "w"
+            else:
+                continue
+            if not call.args:
+                continue
+            path_src = sf.segment(call.args[0]).lower()
+            if "tmp" in path_src or "devnull" in path_src:
+                continue  # this *is* the staged write
+            fn = _func_of(call)
+            ctx = sf.segment(fn) if fn is not None else ""
+            cls = _class_of(call)
+            cls_src = sf.segment(cls) if cls is not None else sf.text
+            if "os.replace" in ctx or "os.rename" in ctx:
+                continue
+            if "fsync" in ctx or ("a" in mode and "fsync" in cls_src):
+                continue
+            out.append(
+                Finding(
+                    "ARTIFACT",
+                    sf.path,
+                    call.lineno,
+                    sf.scope_of(call),
+                    f"durable write ({name}, mode={mode!r}) without "
+                    f"staged-tmp + os.replace (or fsync for journals) — "
+                    f"a crash mid-write publishes a torn file; stage to "
+                    f"`*.tmp` and rename into place",
+                    snippet=sf.segment(call),
+                )
+            )
+    return out
+
+
+# ----------------------------------------------------------- PALLASCONST
+
+_HELP_PALLASCONST = """\
+Pallas kernels using Python control flow on tracer values, or
+`pallas_call` grids/BlockSpecs built from non-static parameters. Inside
+a kernel body every Ref read is a tracer: a Python `if ref[0] > 0:`
+either fails to trace or bakes one branch in permanently — use
+`pl.when`/`lax.cond`; `for` must iterate `range()` over trace-time
+constants (or move to `lax.fori_loop`). Grid and BlockSpec shapes must
+come from `static_argnames` parameters or array shapes, never traced
+values, or every call re-specializes the kernel (the PR 9 recompile
+class, at Pallas cost).
+
+See /opt/skills/guides for the accelerator-side rationale. Waive when a
+Python branch is provably on a trace-time constant the heuristic cannot
+see."""
+
+_PALLAS_SCOPE = ("kernels/",)
+
+
+def _kernel_defs(sf: SourceFile) -> list[ast.FunctionDef]:
+    by_name = {
+        n.name: n for n in ast.walk(sf.tree) if isinstance(n, ast.FunctionDef)
+    }
+    kernels = {
+        n for name, n in by_name.items() if name.endswith("_kernel")
+    }
+    for call in ast.walk(sf.tree):
+        if (
+            isinstance(call, ast.Call)
+            and (_dotted(call.func) or "").endswith("pallas_call")
+            and call.args
+            and isinstance(call.args[0], ast.Name)
+            and call.args[0].id in by_name
+        ):
+            kernels.add(by_name[call.args[0].id])
+    return sorted(kernels, key=lambda n: n.lineno)
+
+
+@rule("PALLASCONST", _HELP_PALLASCONST)
+def check_pallasconst(project: Project) -> list[Finding]:
+    out: list[Finding] = []
+    for sf in project.files:
+        if not _scoped(sf, _PALLAS_SCOPE):
+            continue
+        jits = collect_jits(sf)
+        for kern in _kernel_defs(sf):
+            params = set(_params_of(kern))
+            for sub in ast.walk(kern):
+                if isinstance(sub, (ast.If, ast.While)):
+                    hits = _value_refs(sub.test, params)
+                    if hits:
+                        out.append(
+                            Finding(
+                                "PALLASCONST",
+                                sf.path,
+                                sub.lineno,
+                                sf.scope_of(sub),
+                                f"Python control flow on kernel Ref/param "
+                                f"{sorted(set(hits))} — tracers cannot "
+                                f"drive `if`/`while`; use pl.when or "
+                                f"lax.cond",
+                                snippet=sf.segment(sub.test),
+                            )
+                        )
+                elif isinstance(sub, ast.For):
+                    it = sub.iter
+                    is_range = isinstance(it, ast.Call) and _dotted(
+                        it.func
+                    ) in {"range"}
+                    if not is_range and _value_refs(it, params):
+                        out.append(
+                            Finding(
+                                "PALLASCONST",
+                                sf.path,
+                                sub.lineno,
+                                sf.scope_of(sub),
+                                "Python `for` over a kernel Ref — use "
+                                "lax.fori_loop with a static trip count",
+                                snippet=sf.segment(it),
+                            )
+                        )
+        # Grid/BlockSpec staticness inside jit'd wrappers.
+        for call in ast.walk(sf.tree):
+            if not (
+                isinstance(call, ast.Call)
+                and (_dotted(call.func) or "").endswith("pallas_call")
+            ):
+                continue
+            fn = _func_of(call)
+            jf = jits.get(fn.name) if fn is not None else None
+            if jf is None or jf.node is not fn:
+                continue
+            nonstatic = set(jf.params) - jf.static
+            locals_map = {
+                t.id: a.value
+                for a in ast.walk(fn)
+                if isinstance(a, ast.Assign)
+                for t in a.targets
+                if isinstance(t, ast.Name)
+            }
+            spec_exprs = [
+                kw.value
+                for kw in call.keywords
+                if kw.arg in {"grid", "in_specs", "out_specs", "out_shape"}
+            ]
+            for expr in spec_exprs:
+                bad: set[str] = set()
+                for nm in _value_refs(expr, nonstatic):
+                    bad.add(nm)
+                for n in ast.walk(expr):
+                    if (
+                        isinstance(n, ast.Name)
+                        and n.id in locals_map
+                        and not _is_static_use(n, expr)
+                    ):
+                        bad.update(
+                            _value_refs(locals_map[n.id], nonstatic)
+                        )
+                if bad:
+                    out.append(
+                        Finding(
+                            "PALLASCONST",
+                            sf.path,
+                            call.lineno,
+                            sf.scope_of(call),
+                            f"pallas_call grid/spec depends on non-static "
+                            f"parameter(s) {sorted(bad)} — every call "
+                            f"re-specializes the kernel; add to "
+                            f"static_argnames or derive from shapes",
+                            snippet=sf.segment(expr),
+                        )
+                    )
+    return out

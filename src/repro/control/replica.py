@@ -117,6 +117,7 @@ class ReplicaGroupEngine:
                 impl=se.impl,
                 interpret=se.interpret,
                 data_axis=self._data_axis,
+                docs_format=se.docs_format,
             )
         out = self._group_fns[key](
             self.sengine.dix,
@@ -133,5 +134,12 @@ class ReplicaGroupEngine:
             self.obs.count("replica_dispatches")
             self.obs.observe("replica_pad_lanes", pad)
         if pad:
-            out = tuple(np.asarray(x)[:n] for x in out)
+            out = _slice_pad(out, n)
         return out
+
+
+def _slice_pad(out: tuple, n: int) -> tuple:
+    """Drop pad lanes *on-device*: a lazy slice per leaf, so the dispatch
+    stays asynchronous and the host copy happens at the caller's drain
+    boundary (``_to_results``), not mid-dispatch."""
+    return tuple(x[:n] for x in out)

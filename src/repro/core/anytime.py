@@ -163,6 +163,8 @@ def run_query_anytime(
             exit_reason = "policy"
             break
         state = engine.step(plan, state, i)
+        # analysis: allow[HOSTSYNC] per-range latency measurement is the
+        # point of the reference anytime loop (paper Alg. 2 timing).
         state.vals.block_until_ready()
         times.append((clock() - t0) * 1e3 - sum(times))
         processed += 1

@@ -30,9 +30,31 @@ __all__ = [
     "BM25Params",
     "CollectionStats",
     "bm25_contributions",
+    "checked_int32",
     "collection_stats",
     "invert",
 ]
+
+_INT32_MAX = np.iinfo(np.int32).max
+
+
+def checked_int32(arr: np.ndarray, what: str = "values") -> np.ndarray:
+    """Narrow to int32, raising instead of wrapping past 2^31-1.
+
+    Build-time counterpart of ``serving.bucketing.saturate_bounds``: a
+    docid or bound that silently wraps negative disables the engine's
+    safe-termination test (``bound <= theta`` holds everywhere), so a
+    corpus past the int32 docid space must fail the build loudly, not
+    corrupt the index.
+    """
+    a = np.asarray(arr)
+    if a.size and (int(a.max()) > _INT32_MAX or int(a.min()) < 0):
+        raise OverflowError(
+            f"{what} outside the int32 range [0, {_INT32_MAX}] "
+            f"(min {int(a.min())}, max {int(a.max())}) — the document-"
+            f"ordered index addresses docids/bounds in int32"
+        )
+    return a.astype(np.int32)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -156,6 +178,6 @@ def invert(
         n_terms=corpus.n_terms,
         n_docs=corpus.n_docs,
         ptr=ptr,
-        docs=new_ids[order].astype(np.int32),
+        docs=checked_int32(new_ids[order], "postings docids"),
         scores=contrib[order],
     )

@@ -24,7 +24,13 @@ import os
 
 import numpy as np
 
-from repro.core.bm25 import BM25Params, CollectionStats, collection_stats, invert
+from repro.core.bm25 import (
+    BM25Params,
+    CollectionStats,
+    checked_int32,
+    collection_stats,
+    invert,
+)
 from repro.core.quantize import Quantizer, fit_quantizer
 from repro.core.reorder import Arrangement, arrange
 from repro.data.synth import Corpus
@@ -593,7 +599,7 @@ def build_index(
         tr_blk_start=tr_blk_start,
         tr_blk_end=tr_blk_end,
         tr_bound=tr_bound,
-        term_bound=term_bound.astype(np.int32),
+        term_bound=checked_int32(term_bound, "term bounds"),
         bounds_dense=bounds_dense,
         stats=stats,
         bm25=params,
@@ -822,9 +828,10 @@ def apply_delta(index: ClusteredIndex, delta: IndexDelta) -> ClusteredIndex:
     if d_tr_rows:
         d_bounds[d_tr_term, d_tr_range - R_base] = d_tr_bound
     bounds_dense = np.hstack([np.asarray(index.bounds_dense), d_bounds])
-    term_bound = np.maximum(
-        np.asarray(index.term_bound), d_bounds.max(axis=1)
-    ).astype(np.int32)
+    term_bound = checked_int32(
+        np.maximum(np.asarray(index.term_bound), d_bounds.max(axis=1)),
+        "term bounds",
+    )
 
     return ClusteredIndex(
         n_docs=base_n + delta.n_docs,
@@ -1044,11 +1051,13 @@ def shard_device_index(
                 doc_base=doc_base,
                 n_docs=n_docs,
                 postings=int(mass[lo:hi].sum()),
-                docs=(index.docs[take] - doc_base).astype(np.int32),
+                docs=checked_int32(index.docs[take] - doc_base, "shard docids"),
                 impacts=index.impacts[take].astype(np.int32),
                 blk_start=local_start,
                 blk_len=index.blk_len[gids].astype(np.int32),
-                blk_maxdoc=(index.blk_maxdoc[gids] - doc_base).astype(np.int32),
+                blk_maxdoc=checked_int32(
+                    index.blk_maxdoc[gids] - doc_base, "shard block maxdocs"
+                ),
                 blk_maximp=index.blk_maximp[gids].astype(np.int32),
                 blk_map=blk_map,
                 range_starts=(range_starts[lo:hi] - doc_base).astype(np.int32),

@@ -52,6 +52,7 @@ class Arrangement:
     def range_of_newdoc(self) -> np.ndarray:
         """Range id for every new docid — the Range(d) function of Eq. (2)."""
         n_docs = int(self.range_ends[-1])
+        # analysis: allow[NARROW] values are range ids, bounded by n_ranges
         return np.searchsorted(self.range_ends, np.arange(n_docs), side="right").astype(
             np.int32
         )

@@ -18,6 +18,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.core.bm25 import checked_int32
 from repro.core.clustered_index import ClusteredIndex
 
 __all__ = ["ImpactIndex", "build_impact_index", "saat_query"]
@@ -69,7 +70,7 @@ def build_impact_index(index: ClusteredIndex) -> ImpactIndex:
     return ImpactIndex(
         n_docs=index.n_docs,
         n_terms=V,
-        docs=docs.astype(np.int32),
+        docs=checked_int32(docs, "impact-index docids"),
         imps=imps.astype(np.int32),
         seg_term=seg_term,
         seg_impact=seg_impact,

@@ -170,6 +170,8 @@ def _sha256_file(path: str) -> str:
 def _write_array(root: str, rel: str, arr: np.ndarray) -> dict:
     path = os.path.join(root, rel)
     os.makedirs(os.path.dirname(path), exist_ok=True)
+    # analysis: allow[ARTIFACT] root is the caller's mkdtemp *.tmp-*
+    # staging dir; write_artifact publishes it with one os.replace.
     np.save(path, np.ascontiguousarray(arr))
     return {
         "file": rel,
@@ -291,6 +293,7 @@ def _atomic_publish(tmp: str, path: str, overwrite: bool) -> None:
 
 
 def _write_manifest(root: str, manifest: dict) -> None:
+    # analysis: allow[ARTIFACT] root is the staged dir, see _write_array
     with open(os.path.join(root, "manifest.json"), "w", encoding="utf-8") as f:
         json.dump(manifest, f, indent=1, sort_keys=True)
 

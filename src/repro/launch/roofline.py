@@ -172,8 +172,10 @@ def to_markdown(rows, mesh: str = "single") -> str:
 def main():
     rows = collate()
     os.makedirs(os.path.dirname(OUT), exist_ok=True)
-    with open(OUT, "w") as f:
+    tmp = OUT + ".tmp"
+    with open(tmp, "w") as f:
         json.dump(rows, f, indent=1)
+    os.replace(tmp, OUT)
     print(to_markdown(rows, "single"))
     print(f"\n{len(rows)} cells collated -> {OUT}")
 

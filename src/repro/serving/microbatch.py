@@ -375,6 +375,10 @@ class MicroBatchServer:
     ) -> None:
         """Metrics + trace spans for one drained batch (obs-enabled only)."""
         obs = self.obs
+        if not obs.enabled:
+            # Self-protecting: drain_once gates the call, but a subclass
+            # or future caller must not pay per-query span cost silently.
+            return
         obs.observe("batch_size", len(served), server="micro")
         obs.observe("batch_ms", batch_ms, server="micro")
         obs.gauge("queue_depth", float(len(self._queue)), server="micro")

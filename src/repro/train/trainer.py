@@ -226,6 +226,8 @@ class Trainer:
             self.params, self.opt_state, metrics = self.step_fn(
                 self.params, self.opt_state, batch
             )
+            # analysis: allow[HOSTSYNC] step-boundary fence: dt must
+            # measure the whole device step, not just dispatch latency.
             jax.block_until_ready(metrics["loss"])
             dt = time.perf_counter() - t0
             if self.cfg.step_timeout_s and dt > self.cfg.step_timeout_s:
@@ -234,8 +236,9 @@ class Trainer:
                 self.history.append(
                     {
                         "step": step + 1,
+                        # analysis: allow[HOSTSYNC] log-interval fetch only
                         "loss": float(jax.device_get(metrics["loss"])),
-                        "grad_norm": float(jax.device_get(metrics["grad_norm"])),
+                        "grad_norm": float(jax.device_get(metrics["grad_norm"])),  # analysis: allow[HOSTSYNC]
                         "time_s": dt,
                     }
                 )
